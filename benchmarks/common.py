@@ -1,0 +1,25 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def timer(fn, *args, repeats: int = 3, **kwargs):
+    """Returns (result, best_wall_seconds)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

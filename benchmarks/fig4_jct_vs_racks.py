@@ -1,0 +1,75 @@
+"""Fig. 4 reproduction: average JCT vs number of racks, six wired-only
+baselines vs the optimal method with 0/1/2 wireless subchannels.
+
+Paper setting: network factor ρ=0.5, job size from production statistics
+(≤10 tasks), wired and wireless rates equal. We report means over seeds per
+(M, scheduler) and the fraction of optimal runs proved to optimality within
+the time budget (HiGHS/Gurobi-class exactness is solver-budget-bound).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FULL, emit
+from repro.core import (
+    ProblemInstance,
+    g_list_master_schedule,
+    g_list_schedule,
+    list_schedule,
+    partition_schedule,
+    random_job,
+    random_schedule,
+    solve_bnb,
+)
+
+
+def run(n_tasks: int = 8, seeds: int | None = None, time_limit: float = 10.0):
+    seeds = seeds if seeds is not None else (12 if FULL else 6)
+    racks = (2, 4, 6, 8) if not FULL else (2, 3, 4, 5, 6, 7, 8, 9, 10)
+    rows = []
+    for M in racks:
+        acc: dict[str, list[float]] = {}
+        proved = []
+        for seed in range(seeds):
+            rng = np.random.default_rng(1000 + seed)
+            job = random_job(rng, None, n_tasks=n_tasks, rho=0.5)
+            inst0 = ProblemInstance(job=job, n_racks=M, n_wireless=0)
+            acc.setdefault("random", []).append(
+                random_schedule(inst0, np.random.default_rng(seed)).makespan
+            )
+            acc.setdefault("list", []).append(list_schedule(inst0).makespan)
+            acc.setdefault("partition", []).append(
+                partition_schedule(inst0).makespan
+            )
+            acc.setdefault("g_list", []).append(g_list_schedule(inst0).makespan)
+            acc.setdefault("g_list_master", []).append(
+                g_list_master_schedule(inst0).makespan
+            )
+            for k in (0, 1, 2):
+                inst = ProblemInstance(job=job, n_racks=M, n_wireless=k)
+                r = solve_bnb(inst, time_limit=time_limit)
+                acc.setdefault(f"optimal_k{k}", []).append(r.makespan)
+                if k == 0:
+                    proved.append(r.proved_optimal)
+        for name, vals in acc.items():
+            rows.append((M, name, float(np.mean(vals))))
+        base = np.mean(acc["optimal_k0"])
+        gain1 = 100 * (1 - np.mean(acc["optimal_k1"]) / base)
+        gain2 = 100 * (1 - np.mean(acc["optimal_k2"]) / base)
+        emit(
+            f"fig4_M{M}",
+            0.0,
+            f"jct_opt_wired={base:.1f};gain_1wl={gain1:.1f}%;gain_2wl={gain2:.1f}%;"
+            f"proved={np.mean(proved):.2f};glist={np.mean(acc['g_list']):.1f};"
+            f"random={np.mean(acc['random']):.1f}",
+        )
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Fig. 5 reproduction: average wireless-augmentation gain vs network factor
+ρ ∈ [0.1, 10], for different job sizes, with M = |V| racks (paper setting).
+
+Expected qualitative shape (paper): gain rises with ρ then falls (at high ρ
+the optimal collapses to a single rack where wireless cannot help); larger
+jobs gain more; the second subchannel adds less than the first.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FULL, emit
+from repro.core import ProblemInstance, random_job, solve_bnb
+
+
+def run(time_limit: float = 10.0):
+    rhos = (0.1, 0.5, 1.0, 2.0, 5.0, 10.0)
+    sizes = (6, 8) if not FULL else (6, 8, 10)
+    seeds = 8 if FULL else 5
+    rows = []
+    for n in sizes:
+        for rho in rhos:
+            g1s, g2s = [], []
+            for seed in range(seeds):
+                rng = np.random.default_rng(2000 + seed)
+                job = random_job(rng, None, n_tasks=n, rho=rho)
+                base = solve_bnb(
+                    ProblemInstance(job=job, n_racks=n, n_wireless=0),
+                    time_limit=time_limit,
+                ).makespan
+                m1 = solve_bnb(
+                    ProblemInstance(job=job, n_racks=n, n_wireless=1),
+                    time_limit=time_limit,
+                ).makespan
+                m2 = solve_bnb(
+                    ProblemInstance(job=job, n_racks=n, n_wireless=2),
+                    time_limit=time_limit,
+                ).makespan
+                g1s.append(100 * (1 - m1 / base))
+                g2s.append(100 * (1 - m2 / base))
+            rows.append((n, rho, np.mean(g1s), np.mean(g2s)))
+            emit(
+                f"fig5_n{n}_rho{rho}",
+                0.0,
+                f"gain_1wl={np.mean(g1s):.2f}%;gain_2wl={np.mean(g2s):.2f}%",
+            )
+    return rows
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Render the §Roofline table from the dry-run JSON into EXPERIMENTS.md."""
+
+from __future__ import annotations
+
+import json
+import sys
+
+
+def render(path: str = "EXPERIMENTS/dryrun_final.json") -> str:
+    with open(path) as f:
+        data = json.load(f)
+    PEAK = 197e12
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | useful | roofline-frac | HBM GiB/dev |",
+        "|---|---|---:|---:|---:|---|---:|---:|---:|",
+    ]
+    for r in data:
+        if r["mesh"] != "16x16":
+            continue
+        if r.get("skip"):
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | SKIP (sub-quadratic-only shape) | — | — | — |"
+            )
+            continue
+        if not r["ok"]:
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | |")
+            continue
+        t = r["terms"]
+        dom = max(
+            ("compute_s", "memory_s", "collective_s"), key=lambda k: t[k]
+        ).replace("_s", "")
+        # roofline fraction: useful model compute time over the modeled
+        # step time (= dominant term, perfect-overlap assumption) — the
+        # fraction of peak the cell achieves at its bottleneck.
+        chips = 256
+        useful_s = r["model_flops"] / chips / PEAK
+        max_term = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        frac = useful_s / max_term if max_term else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | {dom} | "
+            f"{t['useful_flops_ratio']:.2f} | {frac:.3f} | "
+            f"{r['peak_memory_per_device'] / 2**30:.2f} |"
+        )
+    return "\n".join(rows)
+
+
+def main() -> None:
+    path = sys.argv[1] if len(sys.argv) > 1 else "EXPERIMENTS/dryrun_final.json"
+    table = render(path)
+    try:
+        with open("EXPERIMENTS.md") as f:
+            doc = f.read()
+        if "<!-- ROOFLINE_TABLE -->" in doc:
+            doc = doc.replace("<!-- ROOFLINE_TABLE -->", table, 1)
+            with open("EXPERIMENTS.md", "w") as f:
+                f.write(doc)
+            print("EXPERIMENTS.md updated")
+            return
+    except FileNotFoundError:
+        pass
+    print(table)
+
+
+if __name__ == "__main__":
+    main()

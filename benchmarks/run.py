@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per paper table/figure plus framework
+benches. Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig4_jct_vs_racks  — paper Fig. 4 (JCT vs racks, baselines ± wireless)
+  fig5_gain_vs_factor — paper Fig. 5 (gain vs network factor)
+  solver_scaling     — §IV-D decomposition / solver comparison
+  plan_gain          — beyond-paper scheduler->training integration
+  kernel_bench       — Pallas kernels (interpret on CPU; see §Roofline for TPU)
+  train_bench        — end-to-end smoke train step
+
+REPRO_BENCH_FULL=1 enables the paper-scale sweeps.
+"""
+
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        fig4_jct_vs_racks,
+        fig5_gain_vs_factor,
+        kernel_bench,
+        plan_gain,
+        solver_scaling,
+        train_bench,
+    )
+
+    print("name,us_per_call,derived")
+    for mod in (
+        fig4_jct_vs_racks,
+        fig5_gain_vs_factor,
+        solver_scaling,
+        plan_gain,
+        kernel_bench,
+        train_bench,
+    ):
+        t0 = time.perf_counter()
+        try:
+            mod.run()
+            print(
+                f"_section_{mod.__name__.split('.')[-1]},"
+                f"{1e6 * (time.perf_counter() - t0):.0f},ok"
+            )
+        except Exception:  # noqa: BLE001 — keep the harness running
+            traceback.print_exc()
+            print(f"_section_{mod.__name__.split('.')[-1]},0,FAILED")
+
+
+if __name__ == "__main__":
+    main()

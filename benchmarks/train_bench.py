@@ -1,0 +1,45 @@
+"""Training-step wall benchmark on the reduced llama config (host CPU) plus
+scheduler-integration (plan) gain measurement."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timer
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.steps import build_train_step, make_train_state
+
+
+def run():
+    cfg = smoke_config("llama3_2_3b")
+    model = build_model(cfg)
+    data = make_pipeline(
+        DataConfig(vocab_size=cfg.vocab_size, global_batch=8, seq_len=64)
+    )
+    step = jax.jit(build_train_step(model, AdamWConfig(), n_micro=2))
+    state = make_train_state(model, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v) for k, v in data.batch_for_step(0).items()}
+    state, _ = step(state, batch)  # compile
+    jax.block_until_ready(state.params)
+
+    def one():
+        s2, m = step(state, batch)
+        jax.block_until_ready(s2.params)
+        return m
+
+    _, t = timer(one)
+    tokens = 8 * 64
+    emit("train_step_smoke_llama", 1e6 * t, f"tokens_s={tokens / t:.0f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

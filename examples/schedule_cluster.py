@@ -1,0 +1,53 @@
+"""Periodic multi-job cluster scheduling (the paper's production scenario):
+a day's worth of periodic jobs ([15]-style workload) scheduled one by one on
+a hybrid DCN, comparing wired-only against wireless-augmented operation and
+a straggler re-plan.
+
+Run:  PYTHONPATH=src python examples/schedule_cluster.py
+"""
+
+import numpy as np
+
+from repro.core import ProblemInstance, random_job, solve_bnb, wired_only
+from repro.distribution.plan import LinkSpec, backward_profile, replan
+from repro.configs import get_config
+
+
+def main() -> None:
+    rng = np.random.default_rng(42)
+    n_jobs = 8
+    total0, total2, proved = 0.0, 0.0, 0
+    print(f"scheduling {n_jobs} periodic jobs (tasks ~ U[5,10], rho=0.5) ...")
+    for j in range(n_jobs):
+        job = random_job(np.random.default_rng(100 + j), None, rho=0.5)
+        inst = ProblemInstance(job=job, n_racks=8, n_wireless=2)
+        r0 = solve_bnb(wired_only(inst), time_limit=10)
+        r2 = solve_bnb(inst, time_limit=10)
+        total0 += r0.makespan
+        total2 += r2.makespan
+        proved += r2.proved_optimal
+        print(
+            f"  job {j}: |V|={job.n_tasks:2d} wired={r0.makespan:7.1f} "
+            f"+wireless={r2.makespan:7.1f} "
+            f"gain={100 * (1 - r2.makespan / r0.makespan):5.1f}%"
+        )
+    print(
+        f"\nfleet: avg wired JCT={total0 / n_jobs:.1f}, augmented="
+        f"{total2 / n_jobs:.1f} ({100 * (1 - total2 / total0):.1f}% reduction, "
+        f"{proved}/{n_jobs} proved optimal)"
+    )
+
+    # Straggler mitigation on the training-integration side.
+    cfg = get_config("llama3_2_3b")
+    g_secs, g_bytes = backward_profile(cfg, tokens_per_device=4096)
+    healthy = replan(g_secs, g_bytes, LinkSpec())
+    degraded = replan(g_secs, g_bytes, LinkSpec(), compute_slowdown=1.6, degraded_aux=1)
+    print(
+        f"\nstraggler re-plan: healthy step {healthy.t_optimal:.3f}s -> "
+        f"degraded pod (1.6x compute, 1 aux circuit lost) {degraded.t_optimal:.3f}s; "
+        f"schedule re-derived in-flight (fault-tolerance hook)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+KV cache through the serve_step — the path the decode_32k/long_500k dry-run
+cells lower at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.lm import build_model
+from repro.runtime.steps import build_serve_step
+
+
+def main() -> None:
+    cfg = smoke_config("llama3_2_3b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    B, prompt_len, gen_len = 4, 16, 24
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, prompt_len)), jnp.int32
+    )
+
+    # Prefill: run the prompt through the cache via decode steps (teacher
+    # forcing); production prefill lowers model.prefill instead.
+    cache = model.init_cache(B, prompt_len + gen_len + 1)
+    serve_step = jax.jit(build_serve_step(model))
+    for t in range(prompt_len):
+        logits, cache = serve_step(params, cache, prompts[:, t])
+
+    tokens = [jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)]
+    t0 = time.perf_counter()
+    for _ in range(gen_len - 1):
+        logits, cache = serve_step(params, cache, tokens[-1])
+        tokens.append(jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32))
+    dt = time.perf_counter() - t0
+    out = jnp.stack(tokens, axis=1)
+    print(f"prompts  : {np.asarray(prompts)[:, :8]}...")
+    print(f"generated: {np.asarray(out)}")
+    print(
+        f"{B} sequences x {gen_len} tokens in {dt:.2f}s "
+        f"({B * gen_len / dt:.1f} tok/s on host CPU, batched KV-cache decode)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""End-to-end training driver: ~100M-parameter llama-family model trained
+for a few hundred steps on the synthetic pipeline, with checkpointing and
+the scheduler-planned gradient-reduction schedule printed up front.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 300] [--dim 256]
+
+On this CPU container the default is a reduced width; pass --dim 768
+--layers 12 for the full ~100M configuration if you have the patience (or a
+real accelerator).
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.distribution.plan import LinkSpec, backward_profile, plan_gradient_schedule
+from repro.models.lm import build_model, count_params
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.steps import build_train_step, make_train_state
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--dim", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = dataclasses.replace(
+        get_config("llama3_2_3b"),
+        n_layers=args.layers,
+        d_model=args.dim,
+        n_heads=max(4, args.dim // 64),
+        n_kv_heads=max(2, args.dim // 128),
+        head_dim=64,
+        d_ff=args.dim * 4,
+        vocab_size=4096,
+    )
+    model = build_model(cfg)
+    state = make_train_state(model, jax.random.PRNGKey(0))
+    n_params = count_params(state.params)
+    print(f"model: {cfg.n_layers}L d={cfg.d_model} params={n_params:,}")
+
+    # Paper-solver communication plan for this model's backward pass.
+    g_secs, g_bytes = backward_profile(cfg, tokens_per_device=args.batch * args.seq)
+    plan = plan_gradient_schedule(g_secs, g_bytes, LinkSpec(), time_limit=3.0)
+    print(
+        f"reduction plan: {100 * plan.gain_vs_serial:.1f}% faster than serial, "
+        f"buckets->channels {plan.channel_of_bucket.tolist()} "
+        f"(proved={plan.proved_optimal})"
+    )
+
+    data = make_pipeline(
+        DataConfig(vocab_size=cfg.vocab_size, global_batch=args.batch, seq_len=args.seq)
+    )
+    opt = AdamWConfig(
+        lr_peak=3e-3, lr_min=3e-4, warmup_steps=20, total_steps=args.steps
+    )
+    step = jax.jit(build_train_step(model, opt, n_micro=2))
+
+    start = 0
+    if ckpt.latest_step(args.ckpt_dir) is not None:
+        restored, start = ckpt.restore(args.ckpt_dir, jax.tree.map(np.asarray, state))
+        state = jax.tree.map(jnp.asarray, restored)
+        print(f"resumed from checkpoint at step {start}")
+
+    t0 = time.perf_counter()
+    for s in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_for_step(s).items()}
+        state, metrics = step(state, batch)
+        if s % 20 == 0 or s == args.steps - 1:
+            dt = time.perf_counter() - t0
+            print(
+                f"step {s:4d}  loss={float(metrics['loss']):.4f}  "
+                f"gnorm={float(metrics['grad_norm']):.3f}  "
+                f"lr={float(metrics['lr']):.2e}  [{dt:.1f}s]"
+            )
+        if s and s % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, s, jax.tree.map(np.asarray, state))
+            print(f"checkpointed step {s}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""The paper's primary contribution: optimal joint job scheduling and
+bandwidth augmentation for hybrid data-center networks (Guo et al., 2022).
+
+Layers:
+  dag / instance / schedule   — problem model and OP-semantics checker
+  bounds                      — §IV-A heuristic bounds (Algorithm 1)
+  simulator                   — discrete-event schedule executor
+  milp / solver_milp          — §IV-B/C generalized transfer model + RP
+                                 linearization, solved by B&B (HiGHS)
+  bisection                   — §IV-D feasibility-subproblem decomposition
+  bnb                         — beyond-paper combinatorial exact B&B
+  vectorized                  — beyond-paper JAX-batched assignment search
+  baselines                   — §V comparison schedulers
+"""
+
+from repro.core.dag import (
+    DagJob,
+    JOB_FAMILIES,
+    make_onestage_mapreduce,
+    make_random_workflow,
+    make_simple_mapreduce,
+    random_job,
+)
+from repro.core.instance import CH_LOCAL, CH_WIRED, ProblemInstance
+from repro.core.schedule import FeasibilityError, Schedule, check_feasible
+from repro.core.bounds import lower_bound, longest_branch, upper_bound
+from repro.core.simulator import simulate
+from repro.core.milp import build_rp, extract_schedule
+from repro.core.solver_milp import MilpResult, solve_optimal, solve_rp
+from repro.core.bisection import BisectionResult, solve_bisection
+from repro.core.bnb import BnbResult, solve_bnb
+from repro.core.vectorized import VectorizedResult, vectorized_search
+from repro.core.baselines import (
+    BASELINES,
+    g_list_master_schedule,
+    g_list_schedule,
+    list_schedule,
+    partition_schedule,
+    random_schedule,
+    single_rack_schedule,
+    wired_only,
+)
+
+__all__ = [
+    "DagJob", "JOB_FAMILIES", "make_onestage_mapreduce", "make_random_workflow",
+    "make_simple_mapreduce", "random_job",
+    "CH_LOCAL", "CH_WIRED", "ProblemInstance",
+    "FeasibilityError", "Schedule", "check_feasible",
+    "lower_bound", "longest_branch", "upper_bound",
+    "simulate",
+    "build_rp", "extract_schedule",
+    "MilpResult", "solve_optimal", "solve_rp",
+    "BisectionResult", "solve_bisection",
+    "BnbResult", "solve_bnb",
+    "VectorizedResult", "vectorized_search",
+    "BASELINES", "g_list_master_schedule", "g_list_schedule", "list_schedule",
+    "partition_schedule", "random_schedule", "single_rack_schedule",
+    "wired_only",
+]

@@ -1,0 +1,70 @@
+"""Heuristic bounds on the optimal job completion time (paper §IV-A).
+
+Upper bound T_max: run the whole job on one rack in topological order; all
+transfers are local. T_max = sum_v p_v + sum_e r_e.
+
+Lower bound T_min: Algorithm 1 ("The Longest Branch Algorithm") — convert
+node costs to out-edge costs c_(u,v) = p_u + r_(u,v), then longest path by
+dynamic programming over a topological order; T_min = max_v dist(v) + p_v.
+
+The paper's Algorithm 1 uses the LOCAL delay r as the per-edge transfer cost,
+which is a valid lower bound whenever local transfer is never slower than a
+network transfer (true in the paper's experiments where r = 0). ``safe=True``
+instead uses min(r_e, q_e, q̌_e), which is a valid bound for arbitrary rates.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.instance import ProblemInstance
+
+__all__ = ["upper_bound", "lower_bound", "longest_branch", "critical_path_dist"]
+
+
+def upper_bound(inst: ProblemInstance) -> float:
+    """T_max = Σ p_v + Σ r_(u,v): single-rack topological execution."""
+    return float(np.sum(inst.job.p) + np.sum(inst.r_local))
+
+
+def critical_path_dist(
+    n: int,
+    edges: np.ndarray,
+    p: np.ndarray,
+    edge_cost: np.ndarray,
+    topo: np.ndarray,
+) -> np.ndarray:
+    """dist(v): longest path from any source to v, where traversing edge
+    (u, v) costs p_u + edge_cost_e (Algorithm 1 lines 4-8)."""
+    dist = np.zeros(n, dtype=np.float64)
+    in_by_node: list[list[int]] = [[] for _ in range(n)]
+    for e in range(edges.shape[0]):
+        in_by_node[int(edges[e, 1])].append(e)
+    for v in topo:
+        best = 0.0
+        for e in in_by_node[int(v)]:
+            u = int(edges[e, 0])
+            cand = dist[u] + p[u] + edge_cost[e]
+            if cand > best:
+                best = cand
+        dist[int(v)] = best
+    return dist
+
+
+def longest_branch(inst: ProblemInstance, safe: bool = False) -> float:
+    """Algorithm 1: T_min = max_v dist(v) + p_v."""
+    job = inst.job
+    if safe:
+        cost = np.minimum(
+            inst.r_local, np.minimum(inst.q_wired, inst.q_wireless)
+        )
+    else:
+        cost = inst.r_local
+    dist = critical_path_dist(job.n_tasks, job.edges, job.p, cost, job.topo_order())
+    return float(np.max(dist + job.p)) if job.n_tasks else 0.0
+
+
+def lower_bound(inst: ProblemInstance, safe: bool = True) -> float:
+    """T_min. ``safe=True`` guards against instances where local transfer is
+    slower than network transfer (not the paper's regime)."""
+    return longest_branch(inst, safe=safe)

@@ -1,0 +1,100 @@
+"""Problem instance: a job plus the hybrid-DCN resource environment.
+
+Paper §II: M racks connected by (a) wired links with guaranteed per-flow
+bandwidth B_s, shared as a single logical channel ``b`` (constraint (8) forbids
+any two concurrent wired flows), (b) |K| orthogonal wireless subchannels of
+bandwidth B each, and (c) local (same-rack) transfer with delay r_(u,v) —
+modelled in §IV-B as the infinite-capacity *virtual channel* ``c``.
+
+Channel index convention used throughout the codebase:
+  CH_WIRED = 0   (channel "b")
+  CH_LOCAL = 1   (virtual channel "c", no contention)
+  2 .. K+1       (wireless subchannels)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dag import DagJob
+
+__all__ = ["ProblemInstance", "CH_WIRED", "CH_LOCAL", "first_wireless"]
+
+CH_WIRED = 0
+CH_LOCAL = 1
+
+
+def first_wireless() -> int:
+    return 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ProblemInstance:
+    """A scheduling instance.
+
+    Attributes:
+      job: the DAG job.
+      n_racks: M, number of feasible racks.
+      n_wireless: |K|, number of orthogonal wireless subchannels.
+      wired_rate: B_s (data units / time unit).
+      wireless_rate: B.
+      local_delay: r_(u,v); either a scalar applied to all edges or a
+        per-edge array. The paper's experiments use symmetric 10 Gbps rates
+        and local transfers that are effectively free (in-rack disk/memory).
+    """
+
+    job: DagJob
+    n_racks: int
+    n_wireless: int = 1
+    wired_rate: float = 1.0
+    wireless_rate: float = 1.0
+    local_delay: float | np.ndarray = 0.0
+
+    @property
+    def n_channels(self) -> int:
+        """Total channels in the generalized model: {b, c} ∪ K."""
+        return 2 + self.n_wireless
+
+    @property
+    def q_wired(self) -> np.ndarray:
+        """q_(u,v) = d / B_s  (paper §II)."""
+        return self.job.d / self.wired_rate
+
+    @property
+    def q_wireless(self) -> np.ndarray:
+        """q̌_(u,v) = d / B."""
+        return self.job.d / self.wireless_rate
+
+    @property
+    def r_local(self) -> np.ndarray:
+        r = np.asarray(self.local_delay, dtype=np.float64)
+        if r.ndim == 0:
+            return np.full(self.job.n_edges, float(r))
+        if r.shape != (self.job.n_edges,):
+            raise ValueError("local_delay must be scalar or per-edge")
+        return r
+
+    def duration_on(self, chan: np.ndarray) -> np.ndarray:
+        """Per-edge transfer duration under a channel assignment vector.
+
+        chan[e] uses the module-level convention (0 wired, 1 local, >=2
+        wireless).
+        """
+        chan = np.asarray(chan)
+        dur = np.where(
+            chan == CH_WIRED,
+            self.q_wired,
+            np.where(chan == CH_LOCAL, self.r_local, self.q_wireless),
+        )
+        return dur
+
+    def durations_matrix(self) -> np.ndarray:
+        """float64[n_edges, n_channels] duration of edge e on channel c."""
+        m = np.empty((self.job.n_edges, self.n_channels), dtype=np.float64)
+        m[:, CH_WIRED] = self.q_wired
+        m[:, CH_LOCAL] = self.r_local
+        for k in range(self.n_wireless):
+            m[:, 2 + k] = self.q_wireless
+        return m

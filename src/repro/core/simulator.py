@@ -1,0 +1,217 @@
+"""Discrete-event schedule executor (serial schedule generation with gap
+insertion).
+
+Given the two discrete decision vectors of the joint problem — task->rack and
+edge->channel — this module derives start times greedily and returns a
+complete, feasibility-checked :class:`Schedule`. It is the execution
+substrate shared by all heuristic baselines, the vectorized solver's
+incumbent generation, and the test oracle that re-executes MILP decisions.
+
+Semantics follow OP exactly: racks are unary resources for computation,
+channel ``b`` and each wireless subchannel are unary resources for transfers,
+the virtual local channel ``c`` has infinite capacity, and an operation placed
+into a timeline occupies a half-open interval [start, start+dur).
+"""
+
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+from repro.core.instance import CH_LOCAL, CH_WIRED, ProblemInstance
+from repro.core.schedule import Schedule
+
+__all__ = ["simulate", "critical_path_priority", "AUTO_CHANNEL"]
+
+AUTO_CHANNEL = -1
+
+
+class _Timeline:
+    """Sorted busy intervals of a unary resource with gap search."""
+
+    __slots__ = ("busy",)
+
+    def __init__(self) -> None:
+        self.busy: list[tuple[float, float]] = []
+
+    def earliest_fit(self, ready: float, dur: float) -> float:
+        t = ready
+        for s, e in self.busy:
+            if t + dur <= s:
+                break
+            if e > t:
+                t = e
+        return t
+
+    def insert(self, start: float, dur: float) -> None:
+        self.busy.append((start, start + dur))
+        self.busy.sort()
+
+
+def critical_path_priority(inst: ProblemInstance, pessimistic: bool = False) -> np.ndarray:
+    """Task priority = longest downstream path (larger = more critical).
+
+    ``pessimistic`` uses wired transfer times on edges (assume remote);
+    otherwise local delays (assume co-located), matching Algorithm 1's cost.
+    """
+    job = inst.job
+    cost = inst.q_wired if pessimistic else inst.r_local
+    tail = job.p.astype(np.float64).copy()
+    topo = job.topo_order()
+    out_by_node: list[list[int]] = [[] for _ in range(job.n_tasks)]
+    for e in range(job.n_edges):
+        out_by_node[int(job.edges[e, 0])].append(e)
+    for v in reversed(topo):
+        best = 0.0
+        for e in out_by_node[int(v)]:
+            w = int(job.edges[e, 1])
+            cand = cost[e] + tail[w]
+            if cand > best:
+                best = cand
+        tail[int(v)] = job.p[int(v)] + best
+    return tail
+
+
+def simulate(
+    inst: ProblemInstance,
+    rack: np.ndarray,
+    chan: np.ndarray | None = None,
+    priority: np.ndarray | None = None,
+    use_wireless: bool = True,
+    check: bool = True,
+) -> Schedule:
+    """Serial schedule generation.
+
+    Args:
+      rack: int[n_tasks] rack per task.
+      chan: int[n_edges] channel per edge; entries may be AUTO_CHANNEL (-1) to
+        let the simulator pick the earliest-finishing permitted channel at
+        schedule time. Same-rack edges are always forced to CH_LOCAL, and
+        cross-rack edges must not be CH_LOCAL. ``None`` = all AUTO.
+      priority: float[n_tasks]; higher = scheduled earlier among ready ops.
+        Defaults to critical-path priority.
+      use_wireless: when False, AUTO channels may only pick the wired channel
+        (the paper's wired-only baselines).
+      check: run the OP feasibility checker on the result.
+
+    Returns a complete Schedule.
+    """
+    job = inst.job
+    n, m = job.n_tasks, job.n_edges
+    rack = np.asarray(rack, dtype=np.int64)
+    if chan is None:
+        chan_in = np.full(m, AUTO_CHANNEL, dtype=np.int64)
+    else:
+        chan_in = np.asarray(chan, dtype=np.int64).copy()
+    if priority is None:
+        priority = critical_path_priority(inst)
+
+    dur_matrix = inst.durations_matrix()
+
+    # Resolve forced channels from locality.
+    same = rack[job.edges[:, 0]] == rack[job.edges[:, 1]] if m else np.zeros(0, bool)
+    for e in range(m):
+        if same[e]:
+            chan_in[e] = CH_LOCAL
+        elif chan_in[e] == CH_LOCAL:
+            raise ValueError(f"edge {e} is cross-rack but assigned local channel")
+
+    rack_tl = [_Timeline() for _ in range(inst.n_racks)]
+    chan_tl = {CH_WIRED: _Timeline()}
+    for k in range(inst.n_wireless):
+        chan_tl[2 + k] = _Timeline()
+
+    start = np.full(n, -1.0)
+    finish_task = np.full(n, np.inf)
+    tstart = np.full(m, -1.0)
+    finish_edge = np.full(m, np.inf)
+    chan_out = chan_in.copy()
+
+    # Dependency bookkeeping: task v waits on all in-edges; edge e waits on
+    # its source task.
+    n_wait_task = np.zeros(n, dtype=np.int64)
+    for e in range(m):
+        n_wait_task[int(job.edges[e, 1])] += 1
+
+    # Ready heaps keyed by (-priority, index). Edge priority inherits the
+    # priority of its destination task (it gates that task).
+    ready: list[tuple[float, int, str, int]] = []
+    seq = 0
+
+    def push_task(v: int) -> None:
+        nonlocal seq
+        heapq.heappush(ready, (-float(priority[v]), seq, "T", v))
+        seq += 1
+
+    def push_edge(e: int) -> None:
+        nonlocal seq
+        v = int(job.edges[e, 1])
+        heapq.heappush(ready, (-float(priority[v]), seq, "E", e))
+        seq += 1
+
+    for v in range(n):
+        if n_wait_task[v] == 0:
+            push_task(v)
+
+    scheduled = 0
+    total_ops = n + m
+    while scheduled < total_ops:
+        if not ready:
+            raise RuntimeError("deadlock: no ready operations (cycle?)")
+        _, _, kind, idx = heapq.heappop(ready)
+        if kind == "T":
+            v = idx
+            ready_t = 0.0
+            for e in np.nonzero(job.edges[:, 1] == v)[0]:
+                ready_t = max(ready_t, finish_edge[int(e)])
+            tl = rack_tl[int(rack[v])]
+            s = tl.earliest_fit(ready_t, float(job.p[v]))
+            tl.insert(s, float(job.p[v]))
+            start[v] = s
+            finish_task[v] = s + float(job.p[v])
+            # Out-edges become ready.
+            for e in np.nonzero(job.edges[:, 0] == v)[0]:
+                push_edge(int(e))
+            scheduled += 1
+        else:
+            e = idx
+            u, v = int(job.edges[e, 0]), int(job.edges[e, 1])
+            ready_t = finish_task[u]
+            c = int(chan_out[e])
+            if c == AUTO_CHANNEL:
+                # Earliest-finish channel among permitted ones.
+                cands = [CH_WIRED]
+                if use_wireless:
+                    cands += [2 + k for k in range(inst.n_wireless)]
+                best = None
+                for cc in cands:
+                    d = float(dur_matrix[e, cc])
+                    s = chan_tl[cc].earliest_fit(ready_t, d)
+                    key = (s + d, s, cc)
+                    if best is None or key < best[0]:
+                        best = (key, cc, s, d)
+                assert best is not None
+                _, c, s, d = best
+                chan_out[e] = c
+                chan_tl[c].insert(s, d)
+            elif c == CH_LOCAL:
+                d = float(dur_matrix[e, CH_LOCAL])
+                s = ready_t
+            else:
+                d = float(dur_matrix[e, c])
+                s = chan_tl[c].earliest_fit(ready_t, d)
+                chan_tl[c].insert(s, d)
+            tstart[e] = s
+            finish_edge[e] = s + d
+            n_wait_task[v] -= 1
+            if n_wait_task[v] == 0:
+                push_task(v)
+            scheduled += 1
+
+    sched = Schedule.build(inst, rack, start, chan_out, tstart)
+    if check:
+        from repro.core.schedule import check_feasible
+
+        check_feasible(inst, sched)
+    return sched

@@ -1,0 +1,36 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU hosts (this container, and any unit-test environment) the kernels run
+in ``interpret=True`` mode — the kernel body executes as traced JAX ops, so
+correctness is identical while TPU Mosaic lowering is exercised only on real
+hardware. The wrapper picks the mode from the default backend.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.cpm import batched_critical_path as _cpm
+from repro.kernels.decode_attention import decode_attention_fwd as _decode
+from repro.kernels.flash_attention import flash_attention_fwd as _flash
+
+__all__ = ["flash_attention", "decode_attention", "batched_critical_path"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, causal=True, block_q=128, block_kv=128):
+    return _flash(
+        q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+        interpret=_interpret(),
+    )
+
+
+def decode_attention(q, k, v, kv_len, block_kv=512):
+    return _decode(q, k, v, kv_len, block_kv=block_kv, interpret=_interpret())
+
+
+def batched_critical_path(w, block_b=8):
+    return _cpm(w, block_b=block_b, interpret=_interpret())

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ref_flash_attention", "ref_decode_attention", "ref_critical_path"]
+
+
+def ref_flash_attention(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, T, KV, D]
+    v: jax.Array,
+    causal: bool = True,
+) -> jax.Array:
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    s = (
+        jnp.einsum("bskgd,btkd->bskgt", qg.astype(jnp.float32), k.astype(jnp.float32))
+        / np.sqrt(D)
+    )
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bskgt,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, D).astype(q.dtype)
+
+
+def ref_decode_attention(
+    q: jax.Array,       # [B, H, D]
+    k: jax.Array,       # [B, T, KV, D]
+    v: jax.Array,
+    kv_len: jax.Array,  # [] or [B]
+) -> jax.Array:
+    B, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = (
+        jnp.einsum("bkgd,btkd->bkgt", qg.astype(jnp.float32), k.astype(jnp.float32))
+        / np.sqrt(D)
+    )
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (B,))
+    valid = jnp.arange(T)[None, :] < kv_len[:, None]  # [B, T]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def ref_critical_path(w: np.ndarray) -> np.ndarray:
+    """Bellman longest-path over max-plus adjacency. w: [B, n, n]."""
+    w = np.asarray(w, dtype=np.float64)
+    B, n, _ = w.shape
+    dist = np.zeros((B, n))
+    for _ in range(n - 1):
+        cand = dist[:, :, None] + w  # [B, u, v]
+        dist = np.maximum(dist, cand.max(axis=1))
+    return dist.astype(np.float32)

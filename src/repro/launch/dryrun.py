@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, and extract roofline terms from the compiled HLO.
+
+The two lines above MUST precede every other import (JAX locks the device
+count at first initialization).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out EXPERIMENTS/dryrun.json
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.distribution.sharding import (
+    activation_rules,
+    batch_sharding,
+    cache_sharding,
+    param_sharding,
+    state_sharding,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ModelConfig
+from repro.models.layers import activation_sharding
+from repro.models.lm import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.steps import (
+    TrainState,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+    make_train_state,
+)
+
+# --------------------------------------------------------------------------
+# Input-shape matrix (assignment): seq_len × global_batch per shape id.
+# --------------------------------------------------------------------------
+SHAPES: dict[str, dict[str, Any]] = {
+    "train_4k": {"kind": "train", "seq": 4096, "batch": 256},
+    "prefill_32k": {"kind": "prefill", "seq": 32768, "batch": 32},
+    "decode_32k": {"kind": "decode", "seq": 32768, "batch": 128},
+    "long_500k": {"kind": "decode", "seq": 524288, "batch": 1},
+}
+
+# long_500k runs only for sub-quadratic-capable families (DESIGN.md §4).
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+# Hardware constants (TPU v5e, per chip).
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s/link
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    if shape == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return f"full-attention family '{cfg.family}' is quadratic at 500k (DESIGN.md §4)"
+    return None
+
+
+# --------------------------------------------------------------------------
+# input_specs: ShapeDtypeStruct stand-ins for every model input.
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_id: str) -> dict[str, jax.ShapeDtypeStruct]:
+    info = SHAPES[shape_id]
+    B, S = info["batch"], info["seq"]
+    sds = jax.ShapeDtypeStruct
+    batch: dict[str, jax.ShapeDtypeStruct] = {}
+    if info["kind"] in ("train",):
+        batch["tokens"] = sds((B, S), jnp.int32)
+        batch["labels"] = sds((B, S), jnp.int32)
+    elif info["kind"] == "prefill":
+        batch["tokens"] = sds((B, S), jnp.int32)
+    if cfg.n_enc_layers or cfg.cross_attn_every:
+        T = S if cfg.n_enc_layers else cfg.n_patches
+        if info["kind"] != "decode":
+            batch["memory"] = sds((B, T, cfg.d_model), jnp.float32)
+    return batch
+
+
+def _micro(cfg: ModelConfig, mesh, global_batch: int) -> int:
+    """Microbatch count: 1 batch row per device per microbatch for big
+    models, up to 4 rows for small ones."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    rows = 1 if cfg.d_model >= 4096 else 4
+    n = max(1, global_batch // (dp * rows))
+    while global_batch % n or (global_batch // n) % dp:
+        n -= 1
+    return max(n, 1)
+
+
+# --------------------------------------------------------------------------
+# Roofline extraction
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    skip: str | None = None
+    error: str | None = None
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    coll_bytes: dict[str, float] = dataclasses.field(default_factory=dict)
+    peak_memory_per_device: float = 0.0
+    model_flops: float = 0.0
+    n_params: float = 0.0
+    n_active_params: float = 0.0
+    compile_s: float = 0.0
+    terms: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _analytic_params(shapes_tree) -> float:
+    return float(
+        sum(np.prod(x.shape) for x in jax.tree.leaves(shapes_tree))
+    )
+
+
+def model_flops_estimate(cfg: ModelConfig, n_params: float, kind: str,
+                         batch: int, seq: int) -> float:
+    """6·N_active·D (train) or 2·N_active·D (inference)."""
+    from repro.models.config import layer_kinds
+
+    n_active = n_params
+    if cfg.n_experts:
+        kinds = layer_kinds(cfg)
+        moe_layers = sum(1 for _, f in kinds if f == "moe")
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        n_active = n_params - moe_layers * (
+            (cfg.n_experts - cfg.experts_per_token) * per_expert
+        )
+    tokens = batch * seq if kind != "decode" else batch  # one token per decode
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def run_cell(arch: str, shape_id: str, multi_pod: bool) -> CellResult:
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    res = CellResult(arch=arch, shape=shape_id, mesh=mesh_name, ok=False)
+    reason = skip_reason(cfg, shape_id)
+    if reason:
+        res.skip = reason
+        res.ok = True
+        return res
+
+    info = SHAPES[shape_id]
+    B, S = info["batch"], info["seq"]
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = build_model(cfg)
+    rules = activation_rules(mesh)
+    rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    batch_specs = input_specs(cfg, shape_id)
+    params_shapes = jax.eval_shape(model.init, rng)
+    n_params = _analytic_params(params_shapes)
+    res.n_params = n_params
+    res.model_flops = model_flops_estimate(cfg, n_params, info["kind"], B, S)
+
+    with activation_sharding(rules):
+        if info["kind"] == "train":
+            n_micro = int(os.environ.get("REPRO_NMICRO", 0)) or _micro(cfg, mesh, B)
+            opt_cfg = AdamWConfig()
+            step = build_train_step(
+                model,
+                opt_cfg,
+                n_micro=n_micro,
+                cast_params_bf16=os.environ.get("REPRO_CAST_BF16", "0") == "1",
+            )
+            state_shapes = jax.eval_shape(
+                lambda r: make_train_state(model, r), rng
+            )
+            in_sh = (
+                state_sharding(state_shapes, mesh),
+                batch_sharding(batch_specs, mesh),
+            )
+            lowered = jax.jit(
+                step,
+                in_shardings=in_sh,
+                out_shardings=(in_sh[0], None),
+                donate_argnums=(0,),  # alias state in/out — halves state HBM
+            ).lower(state_shapes, batch_specs)
+        elif info["kind"] == "prefill":
+            step = build_prefill_step(model)
+            in_sh = (
+                param_sharding(params_shapes, mesh),
+                batch_sharding(batch_specs, mesh),
+            )
+            lowered = jax.jit(step, in_shardings=in_sh).lower(
+                params_shapes, batch_specs
+            )
+        else:  # decode
+            step = build_serve_step(model)
+            mem_struct = None
+            if cfg.n_enc_layers or cfg.cross_attn_every:
+                T = S if cfg.n_enc_layers else cfg.n_patches
+                mem_struct = jax.ShapeDtypeStruct((B, T, cfg.d_model), jnp.float32)
+            cache_shapes = jax.eval_shape(
+                lambda m: model.init_cache(B, S, memory=m), mem_struct
+            )
+            token = jax.ShapeDtypeStruct((B,), jnp.int32)
+            in_sh = (
+                param_sharding(params_shapes, mesh),
+                cache_sharding(cache_shapes, mesh),
+                batch_sharding(token, mesh),
+            )
+            lowered = jax.jit(
+                step,
+                in_shardings=in_sh,
+                out_shardings=(None, in_sh[1]),
+                donate_argnums=(1,),  # alias cache in/out
+            ).lower(params_shapes, cache_shapes, token)
+
+        compiled = lowered.compile()
+
+    res.compile_s = time.perf_counter() - t0
+    # XLA's cost_analysis does not multiply while-loop trip counts (verified
+    # in EXPERIMENTS.md §Dry-run), so we analyze the optimized per-partition
+    # HLO ourselves. All counts below are PER DEVICE.
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    cost = analyze_hlo(compiled.as_text())
+    res.flops = cost.flops
+    res.bytes_accessed = cost.hbm_bytes
+    res.coll_bytes = dict(cost.collective_bytes)
+    try:
+        ma = compiled.memory_analysis()
+        res.peak_memory_per_device = float(
+            getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        res.peak_memory_per_device = 0.0
+
+    chips = 512 if multi_pod else 256
+    total_coll = sum(res.coll_bytes.values())
+    # Counts are per-device (post-SPMD module), so divide by per-chip rates.
+    res.terms = {
+        "compute_s": res.flops / PEAK_FLOPS,
+        "memory_s": res.bytes_accessed / HBM_BW,
+        "collective_s": total_coll / ICI_BW,
+        "useful_flops_ratio": (
+            (res.model_flops / chips) / res.flops if res.flops else 0.0
+        ),
+    }
+    res.ok = True
+    return res
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default=None)
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [ALIASES.get(args.arch, args.arch).replace("-", "_").replace(".", "_")]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    results = []
+    for a, s, mp in cells:
+        try:
+            r = run_cell(a, s, mp)
+        except Exception as e:  # noqa: BLE001 — report, keep going
+            r = CellResult(
+                arch=a, shape=s, mesh="2x16x16" if mp else "16x16",
+                ok=False, error=f"{type(e).__name__}: {e}",
+            )
+        results.append(r)
+        status = "SKIP" if r.skip else ("OK" if r.ok else "FAIL")
+        print(
+            f"[{status}] {r.arch:22s} {r.shape:12s} {r.mesh:8s} "
+            f"flops={r.flops:.3e} bytes={r.bytes_accessed:.3e} "
+            f"coll={sum(r.coll_bytes.values()):.3e} mem/dev={r.peak_memory_per_device/2**30:.2f}GiB "
+            f"compile={r.compile_s:.1f}s"
+            + (f" err={r.error}" if r.error else "")
+            + (f" skip={r.skip}" if r.skip else ""),
+            flush=True,
+        )
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump([r.to_json() for r in results], f, indent=1)
+    nfail = sum(1 for r in results if not r.ok)
+    print(f"\n{len(results) - nfail}/{len(results)} cells passed")
+    raise SystemExit(1 if nfail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state — smoke tests must keep seeing 1 CPU device.
+
+Target hardware: TPU v5e pods. Single pod = 16x16 = 256 chips
+(axes data x model); multi-pod = 2 pods x 256 chips with the leading 'pod'
+axis mapped onto the DCN/OCS inter-pod fabric (the paper's reconfigurable
+"wireless" augmentation layer — see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have {len(devices)}; "
+            "the dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    try:
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    except TypeError:  # older make_mesh without devices kwarg
+        arr = np.asarray(devices[:n]).reshape(shape)
+        return Mesh(arr, axes)
+
+
+def make_local_mesh(model: int = 1) -> Mesh:
+    """1-device mesh for smoke tests and examples on CPU."""
+    arr = np.asarray(jax.devices()[:model]).reshape((1, model))
+    return Mesh(arr, ("data", "model"))

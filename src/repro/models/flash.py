@@ -1,0 +1,160 @@
+"""Memory-tiled (flash) attention in pure JAX with a custom VJP.
+
+Why this exists: XLA materializes the full [B, H, S, S] score tensor for
+einsum attention — 137 GB/device for deepseek-67b at S=4096 — so both the
+CPU dry-run and the TPU target need blockwise attention with online softmax
+and block-recomputed backward. This implementation scans over KV blocks with
+O(B·S·H·D) carry and is the numerical REFERENCE for the Pallas flash kernel
+(same blocking scheme, same stabilization); kernels/flash_attention.py is
+the TPU-optimized twin validated against it.
+
+Forward saves only (o, lse); backward re-walks KV blocks recomputing scores
+(flash-attention-2 style).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["flash_attention"]
+
+NEG_INF = -1e30
+
+
+def _blockify(x: jax.Array, block: int, axis: int) -> jax.Array:
+    """[..., T, ...] -> [..., T//block, block, ...] moved to leading scan axis."""
+    T = x.shape[axis]
+    nb = T // block
+    shape = x.shape[:axis] + (nb, block) + x.shape[axis + 1 :]
+    x = x.reshape(shape)
+    return jnp.moveaxis(x, axis, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, T, KV, D]
+    v: jax.Array,  # [B, T, KV, D]
+    causal: bool = True,
+    block_kv: int = 512,
+) -> jax.Array:
+    o, _ = _flash_fwd_inner(q, k, v, causal, block_kv)
+    return o
+
+
+def _flash_fwd_inner(q, k, v, causal, block_kv):
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(block_kv, T)
+    assert T % bk == 0, (T, bk)
+    scale = 1.0 / np.sqrt(D)
+
+    qg = q.reshape(B, S, KV, G, D)
+    kb = _blockify(k, bk, 1)  # [nb, B, bk, KV, D]
+    vb = _blockify(v, bk, 1)
+
+    o0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    qi = jnp.arange(S)
+
+    def body(carry, inp):
+        o, m, l, jb = carry[0], carry[1], carry[2], carry[3]
+        kj, vj = inp
+        s = (
+            jnp.einsum("bskgd,btkd->bskgt", qg, kj).astype(jnp.float32) * scale
+        )  # [B,S,KV,G,bk]
+        if causal:
+            kj_idx = jb * bk + jnp.arange(bk)
+            mask = qi[:, None] >= kj_idx[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        o = o * alpha[..., None] + jnp.einsum(
+            "bskgt,btkd->bskgd", p.astype(vj.dtype), vj
+        ).astype(jnp.float32)
+        return (o, m_new, l, jb + 1), None
+
+    (o, m, l, _), _ = jax.lax.scan(body, (o0, m0, l0, jnp.zeros((), jnp.int32)), (kb, vb))
+    l = jnp.maximum(l, 1e-30)
+    out = (o / l[..., None]).astype(q.dtype).reshape(B, S, H, D)
+    lse = (m + jnp.log(l)).reshape(B, S, H)  # logsumexp per query
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, block_kv):
+    o, lse = _flash_fwd_inner(q, k, v, causal, block_kv)
+    # The residuals of a custom_vjp are OPAQUE to jax.checkpoint (they are
+    # always stored across the layer scan). Constrain them explicitly so the
+    # stored buffers shard on the model axis — without this GSPMD may store
+    # them replicated (~64 MB/layer each at deepseek scale).
+    from repro.models.layers import shard
+
+    q = shard(q, "act_heads")
+    k = shard(k, "act_heads")
+    v = shard(v, "act_heads")
+    o = shard(o, "act_heads")
+    lse = shard(lse, "act_lse")
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, block_kv, res, do):
+    q, k, v, o, lse = res
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bk = min(block_kv, T)
+    scale = 1.0 / np.sqrt(D)
+
+    qg = q.reshape(B, S, KV, G, D)
+    dog = do.reshape(B, S, KV, G, D)
+    lseg = lse.reshape(B, S, KV, G)
+    # delta_i = rowsum(dO_i * O_i)
+    delta = jnp.sum(
+        do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1
+    ).reshape(B, S, KV, G)
+
+    kb = _blockify(k, bk, 1)
+    vb = _blockify(v, bk, 1)
+    qi = jnp.arange(S)
+
+    def body(dq_acc, inp):
+        jb, kj, vj = inp
+        s = (
+            jnp.einsum("bskgd,btkd->bskgt", qg, kj).astype(jnp.float32) * scale
+        )
+        if causal:
+            kj_idx = jb * bk + jnp.arange(bk)
+            mask = qi[:, None] >= kj_idx[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lseg[..., None])  # [B,S,KV,G,bk]
+        pv = p.astype(v.dtype)
+        dv_j = jnp.einsum("bskgt,bskgd->btkd", pv, dog)
+        dp = jnp.einsum("bskgd,btkd->bskgt", dog, vj).astype(jnp.float32)
+        ds = p * (dp - delta[..., None]) * scale
+        dsv = ds.astype(q.dtype)
+        dq_acc = dq_acc + jnp.einsum("bskgt,btkd->bskgd", dsv, kj).astype(
+            jnp.float32
+        )
+        dk_j = jnp.einsum("bskgt,bskgd->btkd", dsv, qg)
+        return dq_acc, (dk_j, dv_j)
+
+    nb = T // bk
+    dq0 = jnp.zeros((B, S, KV, G, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(
+        body, dq0, (jnp.arange(nb), kb, vb)
+    )
+    dq = dq.astype(q.dtype).reshape(B, S, H, D)
+    dk = jnp.moveaxis(dk_b, 0, 1).reshape(B, T, KV, D).astype(k.dtype)
+    dv = jnp.moveaxis(dv_b, 0, 1).reshape(B, T, KV, D).astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

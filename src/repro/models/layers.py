@@ -1,0 +1,343 @@
+"""Core neural layers: RMSNorm, RoPE, GQA attention, SwiGLU — pure JAX.
+
+Conventions:
+  * Params are nested dicts of jnp arrays; every layer has init_*/apply_*.
+  * Compute runs in ``compute_dtype`` (bf16 by default) with fp32 softmax
+    and norm statistics; params are stored in fp32 for training.
+  * Activation sharding is injected via `shard` hooks that consult the
+    ambient policy installed by repro.distribution.sharding — models stay
+    distribution-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "shard",
+    "activation_sharding",
+    "rms_norm",
+    "init_rms_norm",
+    "init_linear",
+    "linear",
+    "rope_tables",
+    "apply_rope",
+    "init_attention",
+    "attention",
+    "decode_attention",
+    "init_mlp",
+    "mlp_swiglu",
+    "init_embedding",
+]
+
+Params = dict[str, Any]
+
+_TLS = threading.local()
+
+
+def _rules() -> dict[str, Any]:
+    return getattr(_TLS, "rules", None) or {}
+
+
+@contextlib.contextmanager
+def activation_sharding(rules: dict[str, Any]):
+    """Install logical-activation -> PartitionSpec rules (see distribution)."""
+    old = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield
+    finally:
+        _TLS.rules = old
+
+
+def shard(x: jax.Array, name: str) -> jax.Array:
+    """Apply the ambient sharding constraint for logical activation ``name``.
+
+    Constraints degrade per-dimension: any mesh axis whose extent does not
+    divide the corresponding dimension is dropped (e.g. batch=1 long-context
+    cells cannot shard batch). Rank mismatches skip the constraint entirely.
+    """
+    sh = _rules().get(name)
+    if sh is None:
+        return x
+    import numpy as _np
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    mesh = sh.mesh
+    parts = list(sh.spec) + [None] * (x.ndim - len(sh.spec))
+    if len(parts) != x.ndim:
+        return x
+
+    def axsize(a):
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            return int(_np.prod([mesh.shape[n] for n in a]))
+        return int(mesh.shape[a])
+
+    fitted = [
+        a if a is not None and d % axsize(a) == 0 else None
+        for d, a in zip(x.shape, parts)
+    ]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*fitted))
+    )
+
+
+# --------------------------------------------------------------------------
+# Norms / projections
+# --------------------------------------------------------------------------
+
+def init_rms_norm(d: int) -> Params:
+    return {"scale": jnp.ones((d,), dtype=jnp.float32)}
+
+
+def rms_norm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm with fp32 statistics via a mixed-precision reduction.
+
+    Deliberately avoids `x.astype(f32)` on the full tensor: that standalone
+    convert is loop-invariant-hoisted by XLA out of the backward layer scan,
+    materializing an fp32 copy of EVERY saved layer input at once (+12 GiB
+    per device at deepseek-67b scale — §Perf iteration 5). The einsum
+    accumulates in fp32 directly; only the per-token inverse-RMS scalar is
+    rounded back to the compute dtype.
+    """
+    var = jnp.einsum(
+        "...d,...d->...", x, x, preferred_element_type=jnp.float32
+    ) / x.shape[-1]
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv[..., None] * params["scale"].astype(x.dtype)
+
+
+def init_linear(
+    key: jax.Array, d_in: int, d_out: int, bias: bool = False, scale: float | None = None
+) -> Params:
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    p: Params = {
+        "w": jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    }
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=jnp.float32)
+    return p
+
+
+def linear(params: Params, x: jax.Array) -> jax.Array:
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_tables(
+    positions: jax.Array, head_dim: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables [..., head_dim//2] for integer positions."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, D]; cos/sin: [..., S, D//2] broadcast over heads."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:].astype(jnp.float32)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA, causal/full/cross) — XLA einsum path.
+# The Pallas flash kernel (repro.kernels) is an interchangeable drop-in for
+# the inner softmax(QK^T)V; launch-time flag selects it on real TPUs.
+# --------------------------------------------------------------------------
+
+def init_attention(
+    key: jax.Array,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    qkv_bias: bool = False,
+) -> Params:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_linear(ks[0], d_model, n_heads * head_dim, bias=qkv_bias),
+        "wk": init_linear(ks[1], d_model, n_kv_heads * head_dim, bias=qkv_bias),
+        "wv": init_linear(ks[2], d_model, n_kv_heads * head_dim, bias=qkv_bias),
+        "wo": init_linear(ks[3], n_heads * head_dim, d_model),
+    }
+
+
+def _sdpa(
+    q: jax.Array,  # [B, S, H, D]
+    k: jax.Array,  # [B, T, KV, D]
+    v: jax.Array,  # [B, T, KV, D]
+    causal: bool,
+    q_offset: jax.Array | int = 0,
+    kv_len: jax.Array | None = None,
+) -> jax.Array:
+    """Grouped scaled-dot-product attention, fp32 softmax.
+
+    q_offset: absolute position of q[0] (for causal masking of suffixes).
+    kv_len: optional number of valid kv positions (decode with cache).
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, D)
+    scale = 1.0 / np.sqrt(D)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qi = jnp.arange(S)[:, None] + q_offset
+        ki = jnp.arange(T)[None, :]
+        mask = qi >= ki
+        logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    if kv_len is not None:
+        valid = jnp.arange(T) < kv_len  # [T]
+        logits = jnp.where(valid[None, None, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+def attention(
+    params: Params,
+    x: jax.Array,            # [B, S, d_model]
+    cos: jax.Array,
+    sin: jax.Array,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    causal: bool = True,
+    kv_input: jax.Array | None = None,  # cross-attention source [B, T, d]
+    use_rope: bool = True,
+) -> jax.Array:
+    B, S, _ = x.shape
+    src = x if kv_input is None else kv_input
+    T = src.shape[1]
+    q = linear(params["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = linear(params["wk"], src).reshape(B, T, n_kv_heads, head_dim)
+    v = linear(params["wv"], src).reshape(B, T, n_kv_heads, head_dim)
+    if use_rope and kv_input is None:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = shard(q, "act_heads")
+    if S > 1:
+        # Memory-tiled attention: O(S·D) residency instead of O(S^2).
+        # KV heads are expanded to full heads first: the flat [B, *, H, D]
+        # layout keeps every flash residual (q, k, v, o) cleanly sharded on
+        # the 'model' axis — the grouped (KV, G) layout is unshardable when
+        # KV < mesh model extent and would store residuals replicated.
+        from repro.models.flash import flash_attention
+
+        g = n_heads // n_kv_heads
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        k = shard(k, "act_heads")
+        v = shard(v, "act_heads")
+        bk = 512
+        while T % bk:
+            bk //= 2
+        out = flash_attention(q, k, v, causal and kv_input is None, max(bk, 1))
+    else:
+        out = _sdpa(q, k, v, causal=causal and kv_input is None)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return linear(params["wo"], out)
+
+
+def decode_attention(
+    params: Params,
+    x: jax.Array,            # [B, 1, d_model]
+    pos: jax.Array,          # [] current position
+    cache_k: jax.Array,      # [B, T_max, KV, D]
+    cache_v: jax.Array,
+    rope_theta: float,
+    n_heads: int,
+    n_kv_heads: int,
+    head_dim: int,
+    cross: bool = False,
+    kv_len: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token attention against a KV cache; returns (out, k', v')."""
+    B = x.shape[0]
+    q = linear(params["wq"], x).reshape(B, 1, n_heads, head_dim)
+    cos, sin = rope_tables(pos[None], head_dim, rope_theta)
+    q = apply_rope(q, cos[None], sin[None])
+    if not cross:
+        k_new = linear(params["wk"], x).reshape(B, 1, n_kv_heads, head_dim)
+        v_new = linear(params["wv"], x).reshape(B, 1, n_kv_heads, head_dim)
+        k_new = apply_rope(k_new, cos[None], sin[None])
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), pos, axis=1
+        )
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), pos, axis=1
+        )
+        valid = pos + 1
+    else:
+        valid = kv_len if kv_len is not None else cache_k.shape[1]
+    out = _sdpa(
+        q,
+        cache_k.astype(x.dtype),
+        cache_v.astype(x.dtype),
+        causal=False,
+        kv_len=valid,
+    )
+    out = out.reshape(B, 1, n_heads * head_dim)
+    return linear(params["wo"], out), cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int) -> Params:
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": init_linear(ks[0], d_model, d_ff),
+        "wg": init_linear(ks[1], d_model, d_ff),
+        "wo": init_linear(ks[2], d_ff, d_model),
+    }
+
+
+def mlp_swiglu(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(linear(params["wg"], x)) * linear(params["wi"], x)
+    h = shard(h, "act_ffn")
+    return linear(params["wo"], h)
+
+
+# --------------------------------------------------------------------------
+# Embedding
+# --------------------------------------------------------------------------
+
+def init_embedding(key: jax.Array, vocab: int, d_model: int) -> Params:
+    return {
+        "table": jax.random.normal(key, (vocab, d_model), dtype=jnp.float32)
+        * 0.02
+    }
+
+
+def embed(params: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["table"].astype(x.dtype).T

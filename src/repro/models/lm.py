@@ -1,0 +1,534 @@
+"""Unified model builder for every assigned architecture family.
+
+``build_model(cfg)`` returns a :class:`Model` with four pure functions:
+
+  init(rng)                          -> params
+  forward(params, tokens, memory)    -> logits [B, S, V]      (train/prefill)
+  init_cache(batch, max_len, memory) -> cache                 (decode state)
+  decode_step(params, cache, token)  -> (logits [B, 1, V], cache)
+
+Layer stacks scan over the smallest repeating period of layer kinds with
+parameters stacked along a leading repeat axis, so HLO size is independent
+of depth (95-layer deepseek compiles the same graph as a 1-period model).
+
+Mixers: attn (causal self), attn_cross (self + cross), cross (cross-only),
+mamba (SSD), slstm, mlstm. FFNs: mlp (SwiGLU), moe, none.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_mod
+from repro.models import ssm
+from repro.models.config import ModelConfig, layer_kinds, layer_period
+from repro.models.layers import (
+    apply_rope,
+    attention,
+    decode_attention,
+    embed,
+    init_attention,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    linear,
+    mlp_swiglu,
+    rms_norm,
+    rope_tables,
+    shard,
+    unembed,
+)
+
+Params = Any
+AUX_COEF = 0.01
+
+__all__ = ["Model", "build_model", "count_params", "active_param_fraction"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable
+    init_cache: Callable
+    decode_step: Callable
+    loss: Callable
+    encode: Callable | None = None  # enc-dec only: frames -> memory
+    hidden: Callable | None = None  # trunk without unembed
+    prefill: Callable | None = None  # last-position logits (serving)
+
+
+# --------------------------------------------------------------------------
+# Per-kind layer init
+# --------------------------------------------------------------------------
+
+def _init_mixer(key, cfg: ModelConfig, mixer: str) -> Params:
+    if mixer in ("attn", "cross"):
+        return {
+            "norm": init_rms_norm(cfg.d_model),
+            "attn": init_attention(
+                key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                qkv_bias=cfg.qkv_bias,
+            ),
+        }
+    if mixer == "attn_cross":
+        k1, k2 = jax.random.split(key)
+        return {
+            "norm": init_rms_norm(cfg.d_model),
+            "attn": init_attention(
+                k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                qkv_bias=cfg.qkv_bias,
+            ),
+            "xnorm": init_rms_norm(cfg.d_model),
+            "xattn": init_attention(
+                k2, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            ),
+        }
+    if mixer == "mamba":
+        return {"norm": init_rms_norm(cfg.d_model), "ssd": ssm.init_ssd(key, cfg)}
+    if mixer == "slstm":
+        return {"norm": init_rms_norm(cfg.d_model), "cell": ssm.init_slstm(key, cfg)}
+    if mixer == "mlstm":
+        return {"norm": init_rms_norm(cfg.d_model), "cell": ssm.init_mlstm(key, cfg)}
+    raise ValueError(mixer)
+
+
+def _init_ffn(key, cfg: ModelConfig, ffn: str) -> Params:
+    if ffn == "mlp":
+        return {
+            "norm": init_rms_norm(cfg.d_model),
+            "mlp": init_mlp(key, cfg.d_model, cfg.d_ff),
+        }
+    if ffn == "moe":
+        return {
+            "norm": init_rms_norm(cfg.d_model),
+            "moe": moe_mod.init_moe(key, cfg.d_model, cfg.d_ff, cfg.n_experts),
+        }
+    if ffn == "none":
+        return {}
+    raise ValueError(ffn)
+
+
+def _stack(trees: list) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+# --------------------------------------------------------------------------
+# Forward layer application (full sequence)
+# --------------------------------------------------------------------------
+
+def _apply_mixer(
+    lp: Params,
+    cfg: ModelConfig,
+    mixer: str,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    memory: jax.Array | None,
+) -> jax.Array:
+    h = rms_norm(lp["norm"], x, cfg.norm_eps)
+    if mixer == "attn":
+        return x + attention(
+            lp["attn"], h, cos, sin, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        )
+    if mixer == "cross":
+        return x + attention(
+            lp["attn"], h, cos, sin, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            causal=False, kv_input=memory, use_rope=False,
+        )
+    if mixer == "attn_cross":
+        x = x + attention(
+            lp["attn"], h, cos, sin, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        )
+        h2 = rms_norm(lp["xnorm"], x, cfg.norm_eps)
+        return x + attention(
+            lp["xattn"], h2, cos, sin, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            causal=False, kv_input=memory, use_rope=False,
+        )
+    if mixer == "mamba":
+        y, _ = ssm.ssd_forward(lp["ssd"], cfg, h)
+        return x + y
+    if mixer == "slstm":
+        y, _ = ssm.slstm_forward(lp["cell"], cfg, h)
+        return x + y
+    if mixer == "mlstm":
+        y, _ = ssm.mlstm_forward(lp["cell"], cfg, h)
+        return x + y
+    raise ValueError(mixer)
+
+
+def _apply_ffn(
+    lp: Params, cfg: ModelConfig, ffn: str, x: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    if ffn == "none":
+        return x, jnp.zeros((), jnp.float32)
+    h = rms_norm(lp["norm"], x, cfg.norm_eps)
+    if ffn == "mlp":
+        return x + mlp_swiglu(lp["mlp"], h), jnp.zeros((), jnp.float32)
+    y, aux = moe_mod.moe_ffn(
+        lp["moe"], h, cfg.n_experts, cfg.experts_per_token,
+        capacity_factor=cfg.capacity_factor, normalize=cfg.router_normalize,
+    )
+    return x + y, aux
+
+
+# --------------------------------------------------------------------------
+# Decode layer application (single token, cached state)
+# --------------------------------------------------------------------------
+
+def _mixer_cache(cfg: ModelConfig, mixer: str, batch: int, max_len: int):
+    kvd = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    if mixer == "attn":
+        return {
+            "k": jnp.zeros(kvd, jnp.bfloat16),
+            "v": jnp.zeros(kvd, jnp.bfloat16),
+        }
+    if mixer == "cross":
+        return {}  # cross K/V live in the shared memory cache
+    if mixer == "attn_cross":
+        return {
+            "k": jnp.zeros(kvd, jnp.bfloat16),
+            "v": jnp.zeros(kvd, jnp.bfloat16),
+        }
+    if mixer == "mamba":
+        return ssm.ssd_init_state(cfg, batch)
+    if mixer == "slstm":
+        return ssm.slstm_init_state(cfg, batch)
+    if mixer == "mlstm":
+        return ssm.mlstm_init_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+def _decode_mixer(
+    lp: Params,
+    cfg: ModelConfig,
+    mixer: str,
+    x: jax.Array,           # [B, 1, d]
+    pos: jax.Array,
+    mcache: Any,
+    memory: jax.Array | None,
+):
+    h = rms_norm(lp["norm"], x, cfg.norm_eps)
+    if mixer in ("attn", "attn_cross"):
+        out, k, v = decode_attention(
+            lp["attn"], h, pos, mcache["k"], mcache["v"], cfg.rope_theta,
+            cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+        )
+        x = x + out
+        mcache = dict(mcache, k=k, v=v)
+        if mixer == "attn_cross":
+            h2 = rms_norm(lp["xnorm"], x, cfg.norm_eps)
+            xout = attention(
+                lp["xattn"], h2, None, None, cfg.n_heads,
+                cfg.n_kv_heads, cfg.head_dim, causal=False, kv_input=memory,
+                use_rope=False,
+            )
+            x = x + xout
+        return x, mcache
+    if mixer == "cross":
+        out = attention(
+            lp["attn"], h, None, None, cfg.n_heads, cfg.n_kv_heads,
+            cfg.head_dim, causal=False, kv_input=memory, use_rope=False,
+        )
+        return x + out, mcache
+    if mixer == "mamba":
+        y, st = ssm.ssd_decode_step(lp["ssd"], cfg, h, mcache)
+        return x + y, st
+    if mixer == "slstm":
+        y, st = ssm.slstm_decode_step(lp["cell"], cfg, h, mcache)
+        return x + y, st
+    if mixer == "mlstm":
+        y, st = ssm.mlstm_decode_step(lp["cell"], cfg, h, mcache)
+        return x + y, st
+    raise ValueError(mixer)
+
+
+# --------------------------------------------------------------------------
+# Model assembly
+# --------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig, compute_dtype=jnp.bfloat16) -> Model:
+    kinds = layer_kinds(cfg)
+    period = layer_period(cfg)
+    repeats = cfg.n_layers // period
+    pkinds = kinds[:period]
+
+    # ---------------- init ----------------
+    def init(rng: jax.Array) -> Params:
+        keys = jax.random.split(rng, 8)
+        params: dict[str, Any] = {
+            "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model),
+            "norm": init_rms_norm(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["out"] = init_embedding(keys[1], cfg.vocab_size, cfg.d_model)
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        stacks = []
+        for j, (mixer, ffn) in enumerate(pkinds):
+            per_repeat = []
+            for rep in range(repeats):
+                k = lkeys[rep * period + j]
+                k1, k2 = jax.random.split(k)
+                per_repeat.append(
+                    {
+                        "mixer": _init_mixer(k1, cfg, mixer),
+                        "ffn": _init_ffn(k2, cfg, ffn),
+                    }
+                )
+            stacks.append(_stack(per_repeat))
+        params["layers"] = tuple(stacks)
+        if cfg.n_enc_layers:
+            ekeys = jax.random.split(keys[3], cfg.n_enc_layers)
+            enc = [
+                {
+                    "mixer": _init_mixer(jax.random.split(k)[0], cfg, "attn"),
+                    "ffn": _init_ffn(jax.random.split(k)[1], cfg, "mlp"),
+                }
+                for k in ekeys
+            ]
+            params["enc"] = {"layers": _stack(enc), "norm": init_rms_norm(cfg.d_model)}
+        return params
+
+    # ---------------- encoder (enc-dec only) ----------------
+    def encode(params: Params, memory_in: jax.Array) -> jax.Array:
+        """Non-causal encoder over stub frame embeddings [B, S, d]."""
+        x = memory_in.astype(compute_dtype)
+        B, S, _ = x.shape
+        pos = jnp.arange(S)
+        cos, sin = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+        cos, sin = cos[None], sin[None]
+
+        @jax.checkpoint
+        def body_fn(carry, lp):
+            h = rms_norm(lp["mixer"]["norm"], carry, cfg.norm_eps)
+            y = carry + attention(
+                lp["mixer"]["attn"], h, cos, sin, cfg.n_heads, cfg.n_kv_heads,
+                cfg.head_dim, causal=False,
+            )
+            h2 = rms_norm(lp["ffn"]["norm"], y, cfg.norm_eps)
+            y = y + mlp_swiglu(lp["ffn"]["mlp"], h2)
+            y = shard(y, "act_hidden")
+            return y, None
+
+        def body(carry, lp):
+            return body_fn(carry, lp)
+
+        x, _ = jax.lax.scan(body, x, params["enc"]["layers"])
+        return rms_norm(params["enc"]["norm"], x, cfg.norm_eps)
+
+    # ---------------- hidden trunk ----------------
+    def hidden(
+        params: Params,
+        tokens: jax.Array,                 # [B, S]
+        memory: jax.Array | None = None,   # [B, T, d] frames/patches
+    ) -> tuple[jax.Array, jax.Array]:
+        """Final hidden states [B, S, d] and accumulated aux loss."""
+        x = embed(params["embed"], tokens, compute_dtype)
+        x = shard(x, "act_hidden")
+        B, S, _ = x.shape
+        pos = jnp.arange(S)
+        cos, sin = rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+        cos, sin = cos[None], sin[None]
+        mem = None
+        if cfg.n_enc_layers:
+            assert memory is not None, "enc-dec model needs frame embeddings"
+            mem = encode(params, memory)
+        elif memory is not None:
+            mem = memory.astype(compute_dtype)
+
+        def period_fn(x, stacked):
+            # Activation-sharding mode is set by distribution.sharding
+            # (act_in / act_mid / act_out rules); see §Perf iterations 2-7.
+            x = shard(x, "act_in")
+            aux = jnp.zeros((), jnp.float32)
+            for j, (mixer, ffn) in enumerate(pkinds):
+                lp = stacked[j]
+                x = _apply_mixer(lp["mixer"], cfg, mixer, x, cos, sin, mem)
+                x = shard(x, "act_mid")
+                x, a = _apply_ffn(lp["ffn"], cfg, ffn, x)
+                x = shard(x, "act_mid")
+                aux = aux + a
+            # The carry saved by remat across the layer scan.
+            x = shard(x, "act_out")
+            return x, aux
+
+        # Rematerialize each period in the backward pass: activation memory
+        # is one period's inputs per repeat instead of every intermediate.
+        period_ckpt = jax.checkpoint(period_fn)
+
+        def body(carry, stacked):
+            x, aux = carry
+            x, a = period_ckpt(x, stacked)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), params["layers"]
+        )
+        x = rms_norm(params["norm"], x, cfg.norm_eps)
+        return x, aux
+
+    def out_table(params: Params) -> jax.Array:
+        return params["embed"] if cfg.tie_embeddings else params["out"]
+
+    # ---------------- forward (logits; small-model / test path) ----------
+    def forward(
+        params: Params,
+        tokens: jax.Array,
+        memory: jax.Array | None = None,
+    ) -> tuple[jax.Array, jax.Array]:
+        x, aux = hidden(params, tokens, memory)
+        logits = unembed(out_table(params), x)
+        logits = shard(logits, "act_logits")
+        return logits, aux
+
+    # ---------------- loss (vocab-safe chunked cross-entropy) -------------
+    def loss(params: Params, batch: dict[str, jax.Array]) -> jax.Array:
+        x, aux = hidden(params, batch["tokens"], memory=batch.get("memory"))
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        tbl = out_table(params)["table"]
+        B, S, d = x.shape
+        chunk = S
+        for cand in (512, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+            if S % cand == 0:
+                chunk = cand
+                break
+        nc = S // chunk
+        xs = x.reshape(B, nc, chunk, d).transpose(1, 0, 2, 3)
+        ls = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+        ms = (
+            mask.reshape(B, nc, chunk).transpose(1, 0, 2)
+            if mask is not None
+            else jnp.ones((nc, B, chunk), jnp.float32)
+        )
+
+        @jax.checkpoint
+        def chunk_ce(xc, lc, mc):
+            lg = (xc @ tbl.astype(xc.dtype).T).astype(jnp.float32)
+            lg = shard(lg, "act_logits")
+            logz = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, lc[..., None], axis=-1)[..., 0]
+            return jnp.sum((logz - gold) * mc), jnp.sum(mc)
+
+        def body(carry, inp):
+            tot, cnt = carry
+            s, c = chunk_ce(*inp)
+            return (tot + s, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros(())), (xs, ls, ms)
+        )
+        return tot / jnp.maximum(cnt, 1.0) + AUX_COEF * aux
+
+    # ---------------- prefill (serving: last-position logits) -------------
+    def prefill(
+        params: Params,
+        tokens: jax.Array,
+        memory: jax.Array | None = None,
+    ) -> jax.Array:
+        x, _ = hidden(params, tokens, memory)
+        logits = unembed(out_table(params), x[:, -1:, :])
+        return logits
+
+    # ---------------- decode ----------------
+    def init_cache(
+        batch: int, max_len: int, memory: jax.Array | None = None
+    ) -> dict[str, Any]:
+        layer_caches = []
+        for j, (mixer, ffn) in enumerate(pkinds):
+            per_repeat = [
+                _mixer_cache(cfg, mixer, batch, max_len) for _ in range(repeats)
+            ]
+            layer_caches.append(_stack(per_repeat) if per_repeat[0] else {})
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "layers": tuple(layer_caches),
+            "memory": memory,
+        }
+
+    def decode_step(
+        params: Params, cache: dict[str, Any], token: jax.Array  # [B]
+    ) -> tuple[jax.Array, dict[str, Any]]:
+        x = embed(params["embed"], token[:, None], compute_dtype)  # [B,1,d]
+        pos = cache["pos"]
+        mem = cache.get("memory")
+        if mem is not None:
+            mem = mem.astype(compute_dtype)
+
+        # Mirror forward's layer order exactly: scan over REPEATS with the
+        # whole period applied inside the body (period positions interleave
+        # within each repeat; iterating positions as the outer loop would
+        # reorder the layers for period > 1 architectures).
+        def body(x, sc):
+            lps, mcs = sc  # tuples over period positions, sliced per repeat
+            new_mcs = []
+            for j, (mixer, ffn) in enumerate(pkinds):
+                x, mc = _decode_mixer(
+                    lps[j]["mixer"], cfg, mixer, x, pos, mcs[j], mem
+                )
+                x, _ = _apply_ffn(lps[j]["ffn"], cfg, ffn, x)
+                new_mcs.append(mc)
+            return x, tuple(new_mcs)
+
+        if repeats > 1:
+            x, new_layers = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"])
+            )
+        else:
+            take0 = lambda t: jax.tree.map(lambda a: a[0], t)
+            x, c0 = body(
+                x, (take0(params["layers"]), take0(cache["layers"]))
+            )
+            new_layers = jax.tree.map(lambda a: a[None], c0)
+
+        x = rms_norm(params["norm"], x, cfg.norm_eps)
+        out_tbl = params["embed"] if cfg.tie_embeddings else params["out"]
+        logits = unembed(out_tbl, x)
+        new_cache = {
+            "pos": pos + 1,
+            "layers": tuple(new_layers),
+            "memory": cache.get("memory"),
+        }
+        return logits, new_cache
+
+    return Model(
+        cfg=cfg,
+        init=init,
+        forward=forward,
+        init_cache=init_cache,
+        decode_step=decode_step,
+        loss=loss,
+        encode=encode if cfg.n_enc_layers else None,
+        hidden=hidden,
+        prefill=prefill,
+    )
+
+
+# --------------------------------------------------------------------------
+# Parameter accounting (used by the roofline's MODEL_FLOPS = 6·N·D)
+# --------------------------------------------------------------------------
+
+def count_params(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def active_param_fraction(cfg: ModelConfig) -> float:
+    """Fraction of FFN params active per token (MoE top-k / E); 1.0 dense."""
+    if not cfg.n_experts:
+        return 1.0
+    # Count MoE vs non-MoE parameter volumes analytically.
+    kinds = layer_kinds(cfg)
+    moe_layers = sum(1 for _, f in kinds if f == "moe")
+    mlp_layers = sum(1 for _, f in kinds if f == "mlp")
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    moe_total = moe_layers * cfg.n_experts * per_expert
+    moe_active = moe_layers * cfg.experts_per_token * per_expert
+    rest = mlp_layers * per_expert  # dense MLP layers
+    # Attention/mamba/embed params are always active; approximate by
+    # computing them as total - moe_total via callers that know totals.
+    return (moe_active + rest) / max(moe_total + rest, 1)

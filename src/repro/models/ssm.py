@@ -1,0 +1,433 @@
+"""State-space and recurrent mixers: SSD (Mamba-2 style) and xLSTM blocks.
+
+Hardware adaptation (DESIGN.md §2): Mamba-1's per-channel selective scan is
+elementwise/DMA-bound and maps poorly to the MXU. We adapt hybrid layers to
+the SSD (state-space duality) chunked formulation — intra-chunk work becomes
+Q×Q matmuls (MXU-friendly), inter-chunk work is a short lax.scan over chunk
+boundary states. Decode uses the O(1) recurrent update.
+
+The mLSTM uses the stabilized parallel (quadratic) form for training/prefill
+and the matrix-memory recurrent form for decode; the sLSTM is inherently
+sequential and runs as a lax.scan over time with a fused cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import init_linear, init_rms_norm, linear, rms_norm
+
+Params = dict[str, Any]
+
+__all__ = [
+    "init_ssd", "ssd_forward", "ssd_init_state", "ssd_decode_step",
+    "init_mlstm", "mlstm_forward", "mlstm_init_state", "mlstm_decode_step",
+    "init_slstm", "slstm_forward", "slstm_init_state", "slstm_decode_step",
+]
+
+
+# ==========================================================================
+# SSD (Mamba-2 style)
+# ==========================================================================
+
+def init_ssd(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di, H, N = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # Separate projections (clean tensor-parallel sharding of z/x on the
+        # inner dim; B/C/dt are small and replicated).
+        "wz": init_linear(ks[0], d, di),
+        "wx": init_linear(ks[1], d, di),
+        "wbc": init_linear(ks[2], d, 2 * N),
+        "wdt": init_linear(ks[3], d, H),
+        "conv_w": jax.random.normal(ks[4], (cfg.ssm_conv_dim, di), jnp.float32)
+        * (1.0 / np.sqrt(cfg.ssm_conv_dim)),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": init_rms_norm(di),
+        "out_proj": init_linear(ks[5], di, d),
+    }
+
+
+def _split_ssd(cfg: ModelConfig, params: Params, u: jax.Array):
+    N = cfg.ssm_state_dim
+    z = linear(params["wz"], u)
+    x = linear(params["wx"], u)
+    bc = linear(params["wbc"], u)
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt = linear(params["wdt"], u)
+    return z, x, Bm, Cm, dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. x: [B, S, di]; w: [K, di]."""
+    K = w.shape[0]
+    wc = w.astype(x.dtype)
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for k in range(K):  # K is tiny (4); unrolled adds
+        out = out + pad[:, k : k + x.shape[1], :] * wc[K - 1 - k]
+    return out + b.astype(x.dtype)
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """segsum[..., i, j] = sum_{t=j+1..i} a[..., t] for i >= j else -inf.
+
+    a: [..., Q]; returns [..., Q, Q].
+    """
+    Q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), dtype=bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_scan(
+    x: jax.Array,    # [B, S, H, P] inputs (already dt-scaled)
+    a: jax.Array,    # [B, S, H] log-decay per step (<= 0)
+    Bm: jax.Array,   # [B, S, N] input matrix (shared across heads)
+    Cm: jax.Array,   # [B, S, N] output matrix
+    chunk: int,
+    init_state: jax.Array | None = None,  # [B, H, P, N]
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD: returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, "sequence length must be divisible by ssm_chunk"
+    nc = S // Q
+    xr = x.reshape(B, nc, Q, H, P)
+    ar = a.reshape(B, nc, Q, H).astype(jnp.float32)
+    Br = Bm.reshape(B, nc, Q, N)
+    Cr = Cm.reshape(B, nc, Q, N)
+
+    cum = jnp.cumsum(ar, axis=2)                       # [B,nc,Q,H]
+    # Intra-chunk (diagonal) term: att[i,j] = C_i.B_j exp(cum_i - cum_j), i>=j
+    # Kept in f32: casting the decay matrix to bf16 compounds ~1% error per
+    # layer and breaks decode/forward consistency on deep hybrids.
+    L = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))     # [B,nc,H,Q,Q]
+    cb = jnp.einsum(
+        "bcin,bcjn->bcij", Cr, Br, preferred_element_type=jnp.float32
+    )
+    att = cb[:, :, None] * L                           # [B,nc,H,Q,Q] f32
+    y_diag = jnp.einsum(
+        "bchij,bcjhp->bcihp", att, xr.astype(jnp.float32)
+    ).astype(x.dtype)
+
+    # Chunk boundary states: state_c = sum_j exp(cum_last - cum_j) x_j B_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)    # [B,nc,Q,H]
+    states = jnp.einsum(
+        "bcqh,bcqhp,bcqn->bchpn",
+        decay_to_end.astype(x.dtype),
+        xr,
+        Br.astype(x.dtype),
+    )                                                   # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # [B,nc,H]
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+
+    def body(carry, inp):
+        st, dec = inp  # [B,H,P,N], [B,H]
+        new = carry * dec[..., None, None] + st.astype(jnp.float32)
+        return new, carry  # emit state BEFORE this chunk
+
+    final, prev_states = jax.lax.scan(
+        body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # Inter-chunk (off-diagonal) term: y_i += C_i . prev_state * exp(cum_i)
+    y_off = jnp.einsum(
+        "bcqn,bchpn,bcqh->bcqhp",
+        Cr.astype(jnp.float32),
+        prev_states,
+        jnp.exp(cum),
+    ).astype(x.dtype)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    return y, final
+
+
+def ssd_forward(
+    params: Params,
+    cfg: ModelConfig,
+    u: jax.Array,  # [B, S, d_model]
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Full SSD mixer; returns (output [B,S,d], final ssm state)."""
+    B, S, _ = u.shape
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    z, x, Bm, Cm, dt = _split_ssd(cfg, params, u)
+    x = jax.nn.silu(_causal_conv(x, params["conv_w"], params["conv_b"]))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    A = -jnp.exp(params["A_log"])  # [H]
+    a = dt * A  # log decay
+    xh = x.reshape(B, S, H, P)
+    x_dt = xh * dt[..., None].astype(x.dtype)
+    y, state = ssd_scan(x_dt, a, Bm, Cm, cfg.ssm_chunk, init_state)
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * xh
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return linear(params["out_proj"], y), state
+
+
+def ssd_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    return {
+        "ssm": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state_dim),
+            jnp.float32,
+        ),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, cfg.d_inner), jnp.bfloat16),
+    }
+
+
+def ssd_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    u: jax.Array,  # [B, 1, d_model]
+    state: dict[str, jax.Array],
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    B = u.shape[0]
+    H, P = cfg.ssm_heads, cfg.ssm_head_dim
+    z, x, Bm, Cm, dt = _split_ssd(cfg, params, u)
+    x = x[:, 0]  # [B, di]
+    # Rolling causal conv buffer.
+    conv_in = jnp.concatenate(
+        [state["conv"].astype(x.dtype), x[:, None, :]], axis=1
+    )  # [B, K, di] oldest..newest
+    # Match _causal_conv's orientation: w[0] multiplies the NEWEST sample.
+    w = params["conv_w"].astype(x.dtype)[::-1]
+    xc = jnp.einsum("bkd,kd->bd", conv_in, w) + params["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)
+    new_conv = conv_in[:, 1:, :].astype(jnp.bfloat16)
+
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtp * A)  # [B,H]
+    xh = xc.reshape(B, H, P)
+    s = state["ssm"]
+    s = s * decay[..., None, None] + jnp.einsum(
+        "bhp,bn,bh->bhpn",
+        xh.astype(jnp.float32),
+        Bm[:, 0].astype(jnp.float32),
+        dtp,
+    )
+    y = jnp.einsum("bhpn,bn->bhp", s, Cm[:, 0].astype(jnp.float32)).astype(u.dtype)
+    y = y + params["D"].astype(u.dtype)[None, :, None] * xh
+    y = y.reshape(B, 1, cfg.d_inner)
+    y = rms_norm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return linear(params["out_proj"], y), {"ssm": s, "conv": new_conv}
+
+
+# ==========================================================================
+# mLSTM (matrix-memory LSTM, xLSTM)
+# ==========================================================================
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up": init_linear(ks[0], d, 2 * di),     # (x, gate z)
+        "wq": init_linear(ks[1], di, di),
+        "wk": init_linear(ks[2], di, di),
+        "wv": init_linear(ks[3], di, di),
+        "wif": init_linear(ks[4], di, 2 * H),    # input/forget gate logits
+        "norm": init_rms_norm(di),
+        "down": init_linear(ks[5], di, d),
+    }
+
+
+def mlstm_forward(
+    params: Params, cfg: ModelConfig, u: jax.Array
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Stabilized parallel mLSTM. Returns (out [B,S,d], final state)."""
+    B, S, _ = u.shape
+    H = cfg.n_heads
+    di = cfg.d_inner
+    P = di // H
+    xz = linear(params["up"], u)
+    x, z = xz[..., :di], xz[..., di:]
+    q = linear(params["wq"], x).reshape(B, S, H, P)
+    k = linear(params["wk"], x).reshape(B, S, H, P) / np.sqrt(P)
+    v = linear(params["wv"], x).reshape(B, S, H, P)
+    gif = linear(params["wif"], x).astype(jnp.float32)
+    log_i = gif[..., :H]                       # [B,S,H]
+    log_f = jax.nn.log_sigmoid(gif[..., H:])   # [B,S,H]
+
+    # D[i,j] = sum_{t=j+1..i} log_f_t + log_i_j  (i >= j)
+    fseg = _segsum(log_f.transpose(0, 2, 1))   # [B,H,S,S]
+    Dm = fseg + log_i.transpose(0, 2, 1)[:, :, None, :]
+    m = jnp.max(Dm, axis=-1, keepdims=True)    # [B,H,S,1] stabilizer
+    m = jnp.maximum(m, -1e30)                  # guard all -inf rows
+    W = jnp.exp(Dm - m)                        # [B,H,S,S]
+    qk = jnp.einsum("bihp,bjhp->bhij", q, k).astype(jnp.float32)
+    num = jnp.einsum("bhij,bhij,bjhp->bihp", W, qk, v.astype(jnp.float32))
+    den = jnp.einsum("bhij,bhij->bhi", W, qk)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m[..., 0]))
+    h = (num / den.transpose(0, 2, 1)[..., None]).astype(u.dtype)  # [B,S,H,P]
+    h = h.reshape(B, S, di)
+    h = rms_norm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    out = linear(params["down"], h)
+
+    # Final recurrent state (for decode continuation after prefill).
+    cum_f = jnp.cumsum(log_f, axis=1)  # [B,S,H]
+    w_last = jnp.exp(
+        cum_f[:, -1:, :] - cum_f + log_i
+    )  # weight of each step in final state [B,S,H]
+    C = jnp.einsum(
+        "bsh,bshp,bshq->bhpq", w_last, k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = jnp.einsum("bsh,bshp->bhp", w_last, k.astype(jnp.float32))
+    m_fin = jnp.max(cum_f[:, -1:, :] - cum_f + log_i, axis=1)[:, None]  # rough
+    state = {"C": C, "n": n, "m": m_fin[:, 0]}
+    return out, state
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> dict[str, jax.Array]:
+    H = cfg.n_heads
+    P = cfg.d_inner // H
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode_step(
+    params: Params, cfg: ModelConfig, u: jax.Array, state: dict[str, jax.Array]
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    B = u.shape[0]
+    H = cfg.n_heads
+    di = cfg.d_inner
+    P = di // H
+    xz = linear(params["up"], u)
+    x, z = xz[..., :di], xz[..., di:]
+    q = linear(params["wq"], x).reshape(B, H, P)
+    k = linear(params["wk"], x).reshape(B, H, P) / np.sqrt(P)
+    v = linear(params["wv"], x).reshape(B, H, P)
+    gif = linear(params["wif"], x)[:, 0].astype(jnp.float32)
+    log_i = gif[:, :H]
+    log_f = jax.nn.log_sigmoid(gif[:, H:])
+
+    m_new = jnp.maximum(log_f + state["m"], log_i)
+    a = jnp.exp(log_f + state["m"] - m_new)[..., None]
+    b = jnp.exp(log_i - m_new)[..., None]
+    kf = k[:, 0] if k.ndim == 4 else k
+    C = state["C"] * a[..., None] + b[..., None] * jnp.einsum(
+        "bhp,bhq->bhpq", kf.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = state["n"] * a + b * kf.astype(jnp.float32)
+    qf = q.astype(jnp.float32)
+    num = jnp.einsum("bhpq,bhp->bhq", C, qf)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhp,bhp->bh", n, qf)), jnp.exp(-m_new)
+    )
+    h = (num / den[..., None]).astype(u.dtype).reshape(B, 1, di)
+    h = rms_norm(params["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return linear(params["down"], h), {"C": C, "n": n, "m": m_new}
+
+
+# ==========================================================================
+# sLSTM (scalar-memory LSTM with exponential gating; sequential)
+# ==========================================================================
+
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    # 4 gates (z, i, f, o) from input and recurrent h.
+    return {
+        "wx": init_linear(ks[0], d, 4 * d),
+        "wh": init_linear(ks[1], d, 4 * d, scale=0.5 / np.sqrt(d)),
+        "norm": init_rms_norm(d),
+        "up": init_linear(ks[2], d, 2 * (4 * d // 3)),
+        "down": init_linear(ks[3], 4 * d // 3, d),
+    }
+
+
+def _slstm_cell(params: Params, d: int, gx_t, carry):
+    """One sLSTM step. carry = (c, n, m, h); gx_t = precomputed W_x·x_t.
+
+    The input projection is hoisted out of the time scan (§Perf: one
+    [B·S, d]x[d, 4d] matmul instead of S small ones re-reading W_x from HBM
+    every step). Only the genuinely recurrent W_h·h_{t-1} stays inside.
+    """
+    c, n, m, h = carry
+    g = (gx_t + linear(params["wh"], h)).astype(jnp.float32)
+    zt = jnp.tanh(g[..., :d])
+    it = g[..., d : 2 * d]
+    ft = g[..., 2 * d : 3 * d]
+    ot = jax.nn.sigmoid(g[..., 3 * d :])
+    log_f = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(log_f + m, it)
+    ia = jnp.exp(it - m_new)
+    fa = jnp.exp(log_f + m - m_new)
+    c_new = fa * c + ia * zt
+    n_new = fa * n + ia
+    h_new = (ot * c_new / jnp.maximum(n_new, 1.0)).astype(gx_t.dtype)
+    return (c_new, n_new, m_new, h_new), h_new
+
+
+def slstm_forward(
+    params: Params, cfg: ModelConfig, u: jax.Array
+) -> tuple[jax.Array, tuple]:
+    B, S, d = u.shape
+    init = (
+        jnp.zeros((B, d), jnp.float32),
+        jnp.zeros((B, d), jnp.float32),
+        jnp.full((B, d), -1e30, jnp.float32),
+        jnp.zeros((B, d), u.dtype),
+    )
+
+    gx = linear(params["wx"], u)  # [B, S, 4d] — hoisted input projection
+
+    def step(carry, gx_t):
+        return _slstm_cell(params, d, gx_t, carry)
+
+    carry, hs = jax.lax.scan(step, init, gx.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)  # [B,S,d]
+    h = rms_norm(params["norm"], h, cfg.norm_eps)
+    up = linear(params["up"], h)
+    half = up.shape[-1] // 2
+    h = jax.nn.gelu(up[..., :half]) * up[..., half:]
+    return linear(params["down"], h), carry
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> tuple:
+    d = cfg.d_model
+    return (
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.zeros((batch, d), jnp.float32),
+        jnp.full((batch, d), -1e30, jnp.float32),
+        jnp.zeros((batch, d), jnp.bfloat16),
+    )
+
+
+def slstm_decode_step(
+    params: Params, cfg: ModelConfig, u: jax.Array, state: tuple
+) -> tuple[jax.Array, tuple]:
+    d = cfg.d_model
+    x_t = u[:, 0]
+    gx_t = linear(params["wx"], x_t)
+    c, n, m, h = state
+    carry, h_new = _slstm_cell(params, d, gx_t, (c, n, m, h.astype(x_t.dtype)))
+    h2 = rms_norm(params["norm"], h_new[:, None, :], cfg.norm_eps)
+    up = linear(params["up"], h2)
+    half = up.shape[-1] // 2
+    h2 = jax.nn.gelu(up[..., :half]) * up[..., half:]
+    out = linear(params["down"], h2)
+    c, n, m, hh = carry
+    return out, (c, n, m, hh.astype(jnp.bfloat16))

@@ -1,0 +1,129 @@
+"""Step builders: train_step (grad-accumulated AdamW), prefill_step,
+serve_step. These are the functions the launcher jits/lowers; each is a pure
+function of (state, batch) suitable for pjit with NamedShardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import Model
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.grad import accumulate_grads, compress_bf16
+
+__all__ = ["TrainState", "make_train_state", "build_train_step", "build_prefill_step", "build_serve_step"]
+
+Params = Any
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    opt: dict[str, Any]
+    residual: Params | None = None  # error-feedback state (compression on)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt, s.residual), None),
+    lambda _, c: TrainState(params=c[0], opt=c[1], residual=c[2]),
+)
+
+
+def make_train_state(
+    model: Model, rng: jax.Array, compress: bool = False
+) -> TrainState:
+    params = model.init(rng)
+    residual = (
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        if compress
+        else None
+    )
+    return TrainState(params=params, opt=adamw_init(params), residual=residual)
+
+
+def build_train_step(
+    model: Model,
+    opt_cfg: AdamWConfig,
+    n_micro: int = 1,
+    compress_grads: bool = False,
+    cast_params_bf16: bool = False,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``n_micro`` splits the (local) batch into microbatches accumulated via
+    lax.scan — the standard activation-memory lever at scale. With
+    ``compress_grads`` the accumulated gradient is bf16-compressed with
+    fp32 error feedback before the (XLA-inserted) data-parallel reduction.
+    ``cast_params_bf16`` casts the parameter tree once at loss entry so
+    FSDP parameter all-gathers move bf16 instead of fp32 (§Perf iteration:
+    halves forward gather volume; fp32 masters stay in the optimizer).
+    """
+
+    def loss_fn(params, mb):
+        if cast_params_bf16:
+            params = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32
+                else x,
+                params,
+            )
+        return model.loss(params, mb)
+
+    def train_step(state: TrainState, batch: dict[str, jax.Array]):
+        if n_micro > 1:
+            micro = jax.tree.map(
+                lambda x: x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:]),
+                batch,
+            )
+            loss, grads = accumulate_grads(loss_fn, state.params, micro)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+
+        residual = state.residual
+        if compress_grads:
+            grads, residual = compress_bf16(grads, residual)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        params, opt, metrics = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics, loss=loss)
+        return TrainState(params=params, opt=opt, residual=residual), metrics
+
+    return train_step
+
+
+def build_prefill_step(model: Model) -> Callable:
+    """prefill_step(params, batch) -> last-position logits [B, 1, V]."""
+
+    def prefill_step(params: Params, batch: dict[str, jax.Array]):
+        return model.prefill(params, batch["tokens"], memory=batch.get("memory"))
+
+    return prefill_step
+
+
+def build_serve_step(model: Model, serve_bf16: bool = False) -> Callable:
+    """serve_step(params, cache, token) -> (logits, cache): one decode step.
+
+    ``serve_bf16`` casts fp32 parameters to bf16 at entry — on TPU this
+    halves the per-layer FSDP gather bytes (the decode-cell bottleneck).
+    Default False for the dry-run: the CPU backend's FloatNormalization
+    re-upcasts the gathers (measured neutral) while the hoisted cast adds a
+    full bf16 parameter copy to peak memory (§Perf, measured +1 GiB).
+    Deployments on real bf16 hardware should enable it.
+    """
+
+    def serve_step(params: Params, cache: dict[str, Any], token: jax.Array):
+        if serve_bf16:
+            params = jax.tree.map(
+                lambda x: x.astype(jnp.bfloat16)
+                if x.dtype == jnp.float32
+                else x,
+                params,
+            )
+        return model.decode_step(params, cache, token)
+
+    return serve_step

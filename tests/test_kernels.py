@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops
+from repro.kernels.ref import (
+    ref_critical_path,
+    ref_decode_attention,
+    ref_flash_attention,
+)
+from repro.models.flash import flash_attention as jnp_flash
+
+
+@pytest.mark.parametrize(
+    "B,S,H,KV,D,bq,bk,causal",
+    [
+        (1, 256, 4, 4, 128, 128, 128, True),
+        (2, 128, 8, 2, 64, 64, 64, True),
+        (1, 512, 8, 8, 128, 128, 256, False),
+        (1, 128, 4, 1, 128, 32, 128, True),   # MQA
+        (2, 256, 16, 4, 64, 128, 64, True),
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_matches_oracle(B, S, H, KV, D, bq, bk, causal, dtype):
+    rng = np.random.default_rng(hash((B, S, H, KV, D)) % 2**31)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), dtype)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, D)), dtype)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, D)), dtype)
+    got = ops.flash_attention(q, k, v, causal, bq, bk)
+    want = ref_flash_attention(q, k, v, causal)
+    tol = 4e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_kernel_matches_jnp_flash_twin():
+    """kernels/flash_attention and models/flash share the blocking scheme."""
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.standard_normal((2, 256, 8, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 256, 4, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 256, 4, 64)), jnp.float32)
+    a = ops.flash_attention(q, k, v, True, 64, 64)
+    b = jnp_flash(q, k, v, True, 64)
+    np.testing.assert_allclose(a, b, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "B,H,KV,D,T,kvlen",
+    [
+        (2, 8, 2, 128, 1024, 700),
+        (1, 4, 4, 64, 512, 512),
+        (3, 8, 8, 128, 2048, 1),
+        (2, 16, 2, 64, 4096, 3000),
+    ],
+)
+def test_decode_kernel_matches_oracle(B, H, KV, D, T, kvlen):
+    rng = np.random.default_rng(hash((B, H, T)) % 2**31)
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, D)), jnp.float32)
+    got = ops.decode_attention(q, k, v, jnp.int32(kvlen))
+    want = ref_decode_attention(q, k, v, jnp.int32(kvlen))
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_kernel_per_batch_lengths():
+    rng = np.random.default_rng(3)
+    B, H, KV, D, T = 4, 8, 4, 64, 512
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, KV, D)), jnp.float32)
+    lens = jnp.asarray([1, 100, 256, 512], jnp.int32)
+    got = ops.decode_attention(q, k, v, lens)
+    want = ref_decode_attention(q, k, v, lens)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,n", [(8, 8), (16, 12), (32, 16)])
+def test_cpm_kernel_matches_oracle(B, n):
+    rng = np.random.default_rng(n)
+    w = np.full((B, n, n), -np.inf)
+    for b in range(B):
+        for _ in range(3 * n):
+            u, v = sorted(rng.choice(n, 2, replace=False))
+            w[b, u, v] = max(w[b, u, v], rng.uniform(1, 10))
+    got = np.asarray(ops.batched_critical_path(jnp.asarray(w, jnp.float32)))
+    want = ref_critical_path(w)
+    np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def test_jnp_flash_gradients_match_naive():
+    import jax
+
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((2, 128, 8, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((2, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((2, 128, 2, 32)), jnp.float32)
+
+    f1 = lambda q, k, v: jnp.sum(jnp.sin(jnp_flash(q, k, v, True, 32)))
+    f2 = lambda q, k, v: jnp.sum(jnp.sin(ref_flash_attention(q, k, v, True)))
+    g1 = jax.grad(f1, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, atol=5e-5, rtol=5e-5)

@@ -1,0 +1,104 @@
+"""RP linearization correctness: three independent solvers must agree.
+
+The RP MILP (HiGHS B&B — the paper's method), the combinatorial B&B, and the
+§IV-D bisection decomposition are mutually independent implementations;
+agreement on the optimum across random instances validates the reformulation
+(constraints (11)–(26)) against OP's semantics (enforced by check_feasible).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProblemInstance,
+    check_feasible,
+    lower_bound,
+    random_job,
+    solve_bisection,
+    solve_bnb,
+    solve_optimal,
+    upper_bound,
+)
+from repro.core.milp import build_rp
+from repro.core.solver_milp import solve_rp
+
+EPS_SLACK = 0.15  # the paper's ε=0.1 strict-precedence slack
+
+
+def make_instance(seed, n_tasks=5, n_racks=3, n_wireless=None, rho=None):
+    rng = np.random.default_rng(seed)
+    if n_wireless is None:
+        n_wireless = int(rng.integers(0, 3))
+    if rho is None:
+        rho = float(rng.uniform(0.2, 2.0))
+    job = random_job(rng, None, n_tasks=n_tasks, rho=rho)
+    return ProblemInstance(job=job, n_racks=n_racks, n_wireless=n_wireless)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_three_solvers_agree(seed):
+    inst = make_instance(seed)
+    r_milp = solve_optimal(inst, time_limit=90)
+    r_bnb = solve_bnb(inst, time_limit=60)
+    r_bis = solve_bisection(inst, time_limit_per_fp=60, rel_tol=1e-4)
+    assert r_milp.schedule is not None
+    check_feasible(inst, r_milp.schedule, tol=1e-4)
+    check_feasible(inst, r_bnb.schedule)
+    assert r_bnb.makespan == pytest.approx(r_milp.makespan, abs=EPS_SLACK)
+    assert r_bis.makespan == pytest.approx(
+        r_milp.makespan, abs=max(EPS_SLACK, 1e-3 * r_milp.makespan + 1e-4)
+    )
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_paper_exact_binding_equivalent(seed):
+    """(12)/(13) verbatim vs tight big-M binding reach the same optimum."""
+    inst = make_instance(seed, n_tasks=4)
+    a = solve_optimal(inst, time_limit=60, paper_exact_binding=False)
+    b = solve_optimal(inst, time_limit=60, paper_exact_binding=True)
+    assert a.makespan == pytest.approx(b.makespan, abs=EPS_SLACK)
+
+
+def test_optimal_within_paper_bounds():
+    for seed in range(5):
+        inst = make_instance(seed + 50, n_tasks=5)
+        r = solve_bnb(inst, time_limit=30)
+        assert lower_bound(inst) - 1e-6 <= r.makespan <= upper_bound(inst) + 1e-6
+
+
+def test_wireless_augmentation_never_worse():
+    """More subchannels can only reduce the optimal JCT (monotonicity)."""
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        job = random_job(rng, None, n_tasks=5, rho=1.0)
+        prev = None
+        for k in (0, 1, 2):
+            inst = ProblemInstance(job=job, n_racks=3, n_wireless=k)
+            mk = solve_bnb(inst, time_limit=30).makespan
+            if prev is not None:
+                assert mk <= prev + EPS_SLACK
+            prev = mk
+
+
+def test_rp_model_dimensions():
+    inst = make_instance(0, n_tasks=4, n_racks=2, n_wireless=1)
+    model = build_rp(inst)
+    vm = model.vm
+    n, M, m, C = vm.n, vm.M, vm.m, vm.C
+    assert C == 3  # wired + local + 1 wireless
+    expected = (
+        2 * n * M + 2 * m * C + vm.n_pairs_v * M + n * (n - 1)
+        + vm.n_pairs_e * (C - 1) + m * (m - 1) + 1
+    )
+    assert vm.n_vars == expected
+    res = solve_rp(model, time_limit=60)
+    assert res.schedule is not None
+
+
+def test_infeasible_fp_detected():
+    """FP with ℓ below T_min must be infeasible (status 2)."""
+    inst = make_instance(1, n_tasks=4)
+    lo = lower_bound(inst)
+    model = build_rp(inst, tmax=lo * 0.5, feasibility_only=True)
+    res = solve_rp(model, time_limit=60, verify=False)
+    assert res.schedule is None

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: reduced configs, one forward + one train
+step on CPU, asserting output shapes and finiteness (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models.config import layer_kinds, layer_period
+from repro.models.lm import build_model, count_params
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.steps import build_train_step, make_train_state
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    if cfg.n_enc_layers or cfg.cross_attn_every:
+        T = S if cfg.n_enc_layers else 16
+        batch["memory"] = jnp.asarray(
+            rng.standard_normal((B, T, cfg.d_model)), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers >= 12 and cfg.d_model >= 1024
+    assert cfg.n_layers % layer_period(cfg) == 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    batch = _batch(cfg)
+    state = make_train_state(model, jax.random.PRNGKey(0))
+    logits, aux = model.forward(
+        state.params, batch["tokens"], memory=batch.get("memory")
+    )
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all())
+
+    step = jax.jit(build_train_step(model, AdamWConfig(warmup_steps=2), n_micro=2))
+    state2, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert metrics["grad_norm"] > 0.0
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), state.params, state2.params
+    )
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_consistency(arch):
+    """Greedy decode over the same prefix must match teacher-forced forward
+    logits (cache correctness), for every architecture family."""
+    cfg = smoke_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    rng = np.random.default_rng(1)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    memory = None
+    enc_out = None
+    if cfg.n_enc_layers:
+        # forward() encodes raw frames itself; the decode cache stores the
+        # ENCODED memory (prefill-time encoder output).
+        frames = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+        memory = frames
+        enc_out = model.encode(params, frames)
+    elif cfg.cross_attn_every:
+        memory = jnp.asarray(
+            rng.standard_normal((B, 16, cfg.d_model)), jnp.float32
+        )
+        enc_out = memory
+
+    full_logits, _ = model.forward(params, tokens, memory=memory)
+
+    cache = model.init_cache(B, 32, memory=enc_out)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache, tokens[:, t])
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    if cfg.n_experts:
+        # MoE top-k routing is discontinuous and random-init logits are
+        # nearly flat (argmax flips on noise), so compare output
+        # DISTRIBUTIONS: per-position KL(forward || decode) must be tiny.
+        p = jax.nn.log_softmax(full_logits.astype(jnp.float32))
+        q = jax.nn.log_softmax(dec_logits.astype(jnp.float32))
+        kl = jnp.sum(jnp.exp(p) * (p - q), axis=-1)
+        assert float(kl.max()) < 0.1, f"max KL {float(kl.max()):.4f}"
+        assert float(kl.mean()) < 0.02, f"mean KL {float(kl.mean()):.4f}"
+    else:
+        tol = max(0.05, 0.02 * cfg.n_layers)  # bf16 noise compounds per layer
+        np.testing.assert_allclose(
+            np.asarray(dec_logits, np.float32),
+            np.asarray(full_logits, np.float32),
+            atol=tol,
+            rtol=tol,
+        )
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = smoke_config("dbrx_132b")
+    from repro.models.moe import init_moe, moe_ffn
+
+    params = init_moe(jax.random.PRNGKey(0), cfg.d_model, 64, 4)
+    x = jnp.asarray(
+        np.random.default_rng(0).standard_normal((2, 32, cfg.d_model)),
+        jnp.float32,
+    )
+    y, aux = moe_ffn(params, x, 4, 2, capacity_factor=4.0)
+    assert y.shape == x.shape
+    assert float(aux) > 0.0
+    # generous capacity => output differs from zero for almost all tokens
+    nz = float(jnp.mean((jnp.abs(y) > 0).any(-1)))
+    assert nz > 0.9
+
+
+def test_param_count_deepseek_structure():
+    """Analytic parameter audit of the biggest dense config (layer math)."""
+    cfg = get_config("deepseek_67b")
+    d, ff, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.n_layers
+    hd = cfg.head_dim
+    attn = d * cfg.n_heads * hd + 2 * d * cfg.n_kv_heads * hd + cfg.n_heads * hd * d
+    mlp = 3 * d * ff
+    expected = L * (attn + mlp) + 2 * V * d
+    assert 6.0e10 < expected < 7.5e10  # ~67B

@@ -1,0 +1,130 @@
+"""Property + unit tests for the paper's scheduling core (OP/RP semantics)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    BASELINES,
+    ProblemInstance,
+    check_feasible,
+    lower_bound,
+    random_job,
+    simulate,
+    single_rack_schedule,
+    upper_bound,
+)
+from repro.core.dag import (
+    DagJob,
+    make_onestage_mapreduce,
+    make_simple_mapreduce,
+    make_random_workflow,
+    topological_order,
+)
+
+
+def make_instance(seed, n_tasks=6, n_racks=3, n_wireless=1, rho=0.5):
+    rng = np.random.default_rng(seed)
+    job = random_job(rng, None, n_tasks=n_tasks, rho=rho)
+    return ProblemInstance(job=job, n_racks=n_racks, n_wireless=n_wireless)
+
+
+# ---------------------------------------------------------------------------
+# DAG + generators
+# ---------------------------------------------------------------------------
+
+def test_generators_produce_valid_dags(rng):
+    for fam, fn in (
+        ("simple", lambda: make_simple_mapreduce(rng, n_map=5)),
+        ("onestage", lambda: make_onestage_mapreduce(rng, n_map=3, n_reduce=2)),
+        ("random", lambda: make_random_workflow(rng, n_tasks=8)),
+    ):
+        job = fn()
+        topological_order(job.n_tasks, job.edges)  # raises on cycle
+        assert (job.p >= 1.0).all() and (job.p <= 100.0).all()
+
+
+def test_network_factor_scaling(rng):
+    for rho in (0.1, 1.0, 5.0):
+        job = make_onestage_mapreduce(rng, n_map=4, n_reduce=3, rho=rho)
+        inst = ProblemInstance(job=job, n_racks=4)
+        assert np.mean(inst.q_wired) == pytest.approx(
+            rho * np.mean(job.p), rel=1e-6
+        )
+
+
+def test_dag_rejects_cycles():
+    with pytest.raises(ValueError):
+        DagJob(p=[1.0, 1.0], edges=[[0, 1], [1, 0]], d=[1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# Bounds (§IV-A)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_bounds_sandwich_heuristics(seed):
+    """T_min <= any feasible schedule <= T_max for the single-rack scheme."""
+    inst = make_instance(seed)
+    lo, hi = lower_bound(inst), upper_bound(inst)
+    assert lo <= hi + 1e-9
+    s = single_rack_schedule(inst)
+    assert s.makespan <= hi + 1e-6
+    assert s.makespan >= lo - 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n_wireless=st.integers(0, 3))
+def test_all_baselines_feasible_and_bounded(seed, n_wireless):
+    inst = make_instance(seed, n_wireless=n_wireless)
+    lo = lower_bound(inst)
+    rng = np.random.default_rng(seed)
+    for name, fn in BASELINES.items():
+        sched = fn(inst, rng) if name == "random" else fn(inst)
+        mk = check_feasible(inst, sched)
+        assert mk >= lo - 1e-6, f"{name} beats the lower bound?!"
+
+
+# ---------------------------------------------------------------------------
+# Simulator (serial SGS executor)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n_racks=st.integers(1, 5),
+    n_wireless=st.integers(0, 2),
+)
+def test_simulate_any_assignment_is_feasible(seed, n_racks, n_wireless):
+    inst = make_instance(seed, n_racks=n_racks, n_wireless=n_wireless)
+    rng = np.random.default_rng(seed + 1)
+    rack = rng.integers(0, n_racks, size=inst.job.n_tasks)
+    sched = simulate(inst, rack, use_wireless=n_wireless > 0)
+    check_feasible(inst, sched)
+    assert (sched.rack == rack).all(), "simulator must respect the assignment"
+
+
+def test_simulate_rejects_inconsistent_local_channel():
+    inst = make_instance(0, n_racks=3)
+    rack = np.zeros(inst.job.n_tasks, dtype=np.int64)
+    rack[inst.job.edges[0, 1]] = 1  # first edge crosses racks
+    chan = np.full(inst.job.n_edges, -1, dtype=np.int64)
+    chan[0] = 1  # CH_LOCAL on a cross edge
+    with pytest.raises(ValueError):
+        simulate(inst, rack, chan=chan)
+
+
+def test_wireless_cannot_hurt():
+    """The earliest-finish channel choice means adding subchannels never
+    increases the greedy makespan on the same assignment."""
+    for seed in range(10):
+        inst0 = make_instance(seed, n_wireless=0)
+        inst2 = ProblemInstance(
+            job=inst0.job, n_racks=inst0.n_racks, n_wireless=2
+        )
+        rng = np.random.default_rng(seed)
+        rack = rng.integers(0, inst0.n_racks, size=inst0.job.n_tasks)
+        m0 = simulate(inst0, rack, use_wireless=False).makespan
+        m2 = simulate(inst2, rack, use_wireless=True).makespan
+        assert m2 <= m0 + 1e-6

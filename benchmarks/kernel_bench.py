@@ -49,10 +49,43 @@ def run():
     )
     _, t = timer(lambda: ops.batched_critical_path(w).block_until_ready(), repeats=1)
     emit("pallas_cpm_interpret_4096x16", 1e6 * t, "interpret-mode(host)")
+    _, t = timer(
+        lambda: ops.batched_critical_path(w, block_b=256).block_until_ready(),
+        repeats=1,
+    )
+    emit("pallas_cpm_interpret_4096x16_bb256", 1e6 * t, "interpret-mode(host)")
+
+
+def run_search_engine():
+    """The two stages of the vectorized search substrate on one size bucket."""
+    from repro.core import ProblemInstance, random_job
+    from repro.core.vectorized import (
+        batched_lower_bound,
+        make_batched_evaluator,
+        sample_assignments,
+    )
+
+    rng = np.random.default_rng(0)
+    job = random_job(rng, None, n_tasks=10, rho=0.5)
+    inst = ProblemInstance(job=job, n_racks=6, n_wireless=1)
+    racks = sample_assignments(rng, 10, 6, 8192)
+
+    evaluate = make_batched_evaluator(inst)
+    np.asarray(evaluate(racks))  # compile the bucket
+    _, t = timer(lambda: np.asarray(evaluate(racks)))
+    emit("optable_scan_eval_8192xN10", 1e6 * t, f"cands_per_s={racks.shape[0] / t:.0f}")
+
+    batched_lower_bound(inst, racks, use_kernel=True)  # compile the bucket
+    _, t = timer(lambda: batched_lower_bound(inst, racks, use_kernel=True))
+    emit("pallas_cpm_lb_8192xN10", 1e6 * t, f"cands_per_s={racks.shape[0] / t:.0f}")
+
+    _, t = timer(lambda: batched_lower_bound(inst, racks, use_kernel=False))
+    emit("edgelist_lb_8192xN10", 1e6 * t, f"cands_per_s={racks.shape[0] / t:.0f}")
 
 
 def main():
     run()
+    run_search_engine()
 
 
 if __name__ == "__main__":

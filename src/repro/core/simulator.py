@@ -15,6 +15,7 @@ into a timeline occupies a half-open interval [start, start+dur).
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 
 import numpy as np
@@ -22,9 +23,91 @@ import numpy as np
 from repro.core.instance import CH_LOCAL, CH_WIRED, ProblemInstance
 from repro.core.schedule import Schedule
 
-__all__ = ["simulate", "critical_path_priority", "AUTO_CHANNEL"]
+__all__ = [
+    "simulate",
+    "critical_path_priority",
+    "build_op_tables",
+    "OpTables",
+    "AUTO_CHANNEL",
+    "OP_TASK",
+    "OP_EDGE",
+    "OP_PAD",
+]
 
 AUTO_CHANNEL = -1
+
+# Operation kinds in the static op table. OP_PAD marks no-op rows appended by
+# consumers that pad the table to a fixed size bucket (the vectorized engine).
+OP_TASK = 0
+OP_EDGE = 1
+OP_PAD = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class OpTables:
+    """Static, precedence-compatible operation tables for one instance.
+
+    The shared substrate between the host simulator and the vectorized batch
+    evaluator: both walk the same interleaved (edge*, task) sequence in
+    topological order, and both resolve task readiness through the same
+    padded in-edge table instead of scanning the edge list per event.
+
+    Attributes:
+      kind: int32[n_ops] OP_TASK / OP_EDGE rows, n_ops = n_tasks + n_edges.
+      idx: int32[n_ops] task id for OP_TASK rows, edge id for OP_EDGE rows.
+      edge_src / edge_dst: int32[n_edges] endpoints (copies of job.edges cols).
+      task_in_edges: int32[n_tasks, max_indeg] edge ids entering each task,
+        right-padded with -1 (max_indeg >= 1 always).
+      task_out_edges: int32[n_tasks, max_outdeg] edge ids leaving each task,
+        right-padded with -1 (max_outdeg >= 1 always).
+    """
+
+    kind: np.ndarray
+    idx: np.ndarray
+    edge_src: np.ndarray
+    edge_dst: np.ndarray
+    task_in_edges: np.ndarray
+    task_out_edges: np.ndarray
+
+    @property
+    def n_ops(self) -> int:
+        return int(self.kind.shape[0])
+
+
+def build_op_tables(inst: ProblemInstance) -> OpTables:
+    """Build the static op tables for ``inst`` (topo order: in-edges, then task)."""
+    job = inst.job
+    n, m = job.n_tasks, job.n_edges
+    in_lists: list[list[int]] = [[] for _ in range(n)]
+    out_lists: list[list[int]] = [[] for _ in range(n)]
+    for e in range(m):
+        out_lists[int(job.edges[e, 0])].append(e)
+        in_lists[int(job.edges[e, 1])].append(e)
+
+    kind: list[int] = []
+    idx: list[int] = []
+    for v in job.topo_order():
+        for e in in_lists[int(v)]:
+            kind.append(OP_EDGE)
+            idx.append(e)
+        kind.append(OP_TASK)
+        idx.append(int(v))
+
+    def pad_table(lists: list[list[int]]) -> np.ndarray:
+        width = max(1, max((len(l) for l in lists), default=0))
+        out = np.full((n, width), -1, dtype=np.int32)
+        for v, l in enumerate(lists):
+            out[v, : len(l)] = l
+        return out
+
+    return OpTables(
+        kind=np.asarray(kind, dtype=np.int32),
+        idx=np.asarray(idx, dtype=np.int32),
+        edge_src=job.edges[:, 0].astype(np.int32),
+        edge_dst=job.edges[:, 1].astype(np.int32),
+        task_in_edges=pad_table(in_lists),
+        task_out_edges=pad_table(out_lists),
+    )
 
 
 class _Timeline:
@@ -108,6 +191,7 @@ def simulate(
         priority = critical_path_priority(inst)
 
     dur_matrix = inst.durations_matrix()
+    tables = build_op_tables(inst)
 
     # Resolve forced channels from locality.
     same = rack[job.edges[:, 0]] == rack[job.edges[:, 1]] if m else np.zeros(0, bool)
@@ -130,9 +214,7 @@ def simulate(
 
     # Dependency bookkeeping: task v waits on all in-edges; edge e waits on
     # its source task.
-    n_wait_task = np.zeros(n, dtype=np.int64)
-    for e in range(m):
-        n_wait_task[int(job.edges[e, 1])] += 1
+    n_wait_task = (tables.task_in_edges >= 0).sum(axis=1).astype(np.int64)
 
     # Ready heaps keyed by (-priority, index). Edge priority inherits the
     # priority of its destination task (it gates that task).
@@ -163,7 +245,9 @@ def simulate(
         if kind == "T":
             v = idx
             ready_t = 0.0
-            for e in np.nonzero(job.edges[:, 1] == v)[0]:
+            for e in tables.task_in_edges[v]:
+                if e < 0:
+                    break
                 ready_t = max(ready_t, finish_edge[int(e)])
             tl = rack_tl[int(rack[v])]
             s = tl.earliest_fit(ready_t, float(job.p[v]))
@@ -171,7 +255,9 @@ def simulate(
             start[v] = s
             finish_task[v] = s + float(job.p[v])
             # Out-edges become ready.
-            for e in np.nonzero(job.edges[:, 0] == v)[0]:
+            for e in tables.task_out_edges[v]:
+                if e < 0:
+                    break
                 push_edge(int(e))
             scheduled += 1
         else:

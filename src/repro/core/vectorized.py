@@ -3,17 +3,38 @@
 The paper's solver is host-side B&B. On TPU-class hardware the natural
 adaptation of its *search* is massive data parallelism: evaluate tens of
 thousands of candidate rack assignments simultaneously as one batched tensor
-program. Each candidate is scored by a greedy non-delay schedule executed in
-lock-step across the batch (one unrolled pass over operations in topological
-order, channel choice = earliest finishing channel), and by a batched
-critical-path lower bound (iterated max-plus relaxation — the Pallas `cpm`
-kernel accelerates this inner loop on TPU).
+program. This module implements that search as a two-stage, device-sharded
+batch engine:
+
+  Stage 1 (bound): the critical-path lower bound of every candidate in the
+  batch is computed with :func:`repro.kernels.ops.batched_critical_path`
+  (the Pallas ``cpm`` kernel — iterated max-plus relaxation on dense
+  adjacency blocks). Candidates whose bound already meets the running
+  incumbent are discarded without ever being scheduled.
+
+  Stage 2 (evaluate): survivors are scored by a greedy non-delay schedule
+  executed in lock-step across the batch. The evaluator is a single
+  ``lax.scan`` over a *static op table* — padded int32/float32 tables
+  (kind / task / edge / endpoints / durations / in-edge lists, built by
+  :func:`repro.core.simulator.build_op_tables`) describing the interleaved
+  (edge*, task) sequence in topological order. Because the tables are scan
+  inputs rather than Python-unrolled constants, one compiled program serves
+  every instance that fits the same size bucket; new instances cost zero
+  recompilation. Batches are sharded across local devices with ``shard_map``
+  when more than one device is present, degrading gracefully to a plain
+  ``jit`` on a single-device (CPU) host.
+
+A seeded local-search refinement loop mutates the incumbent's assignment and
+feeds the mutants back through the same two stages, so the sampled regime
+(instances too big to enumerate) converges instead of being one-shot.
 
 This module is an *incumbent generator / pruner*: the winning assignment is
 re-executed exactly with the host simulator and verified by the OP checker.
 Exactness guarantees come from `bnb`/`solver_milp`; tests assert the
 vectorized score is always >= the exact optimum and == the simulator's
-makespan for the reconstructed schedule.
+makespan for the reconstructed schedule. Pruning is exact with respect to
+the greedy objective: greedy(c) >= LB(c), so LB(c) >= incumbent implies c
+cannot improve the incumbent.
 """
 
 from __future__ import annotations
@@ -25,9 +46,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.instance import CH_LOCAL, CH_WIRED, ProblemInstance
+from repro.core.instance import ProblemInstance
 from repro.core.schedule import Schedule
-from repro.core.simulator import simulate
+from repro.core.simulator import OP_PAD, OP_TASK, build_op_tables, simulate
 
 __all__ = [
     "enumerate_assignments",
@@ -71,125 +92,333 @@ def sample_assignments(
     return rng.integers(0, max_racks, size=(count, n), dtype=np.int32).astype(np.int32)
 
 
-def _op_order(inst: ProblemInstance) -> list[tuple[str, int]]:
-    """Static precedence-compatible op order: in-edges then task, topo order."""
-    job = inst.job
-    order: list[tuple[str, int]] = []
-    for v in job.topo_order():
-        for e in job.in_edges(int(v)):
-            order.append(("E", int(e)))
-        order.append(("T", int(v)))
-    return order
+# ---------------------------------------------------------------------------
+# Size buckets
+# ---------------------------------------------------------------------------
+
+def _bucket(x: int, lo: int = 8) -> int:
+    """Smallest power of two >= max(x, lo): the size-bucket rounding used for
+    every padded dimension so compiled programs are shared across instances."""
+    b = lo
+    while b < x:
+        b *= 2
+    return b
 
 
-def make_batched_evaluator(inst: ProblemInstance, use_wireless: bool = True):
-    """Build a jitted fn: rack[B, n] int32 -> makespan[B] float32.
+# ---------------------------------------------------------------------------
+# Stage-2 evaluator: op-table lax.scan program
+# ---------------------------------------------------------------------------
 
-    Greedy non-delay schedule per batch element, identical control flow
-    across the batch (fully vectorized; no host sync inside).
+# Incremented each time the scan evaluator is traced; lets tests assert that
+# instances sharing a size bucket reuse the compiled program.
+TRACE_COUNT = 0
+
+
+def _scan_evaluate(
+    rack,       # int32[B, n_pad]
+    kind,       # int32[n_ops]   OP_TASK / OP_EDGE / OP_PAD
+    op_task,    # int32[n_ops]   task id for OP_TASK rows (0 otherwise)
+    op_edge,    # int32[n_ops]   edge id for OP_EDGE rows (0 otherwise)
+    op_src,     # int32[n_ops]   edge source task (0 otherwise)
+    op_dst,     # int32[n_ops]   edge dest task (0 otherwise)
+    op_p,       # f32[n_ops]     task duration
+    op_wired,   # f32[n_ops]     wired transfer duration
+    op_wireless,  # f32[n_ops]   wireless transfer duration
+    op_local,   # f32[n_ops]     local transfer delay
+    op_in,      # int32[n_ops, indeg_pad] in-edge ids gating a task row;
+                #                the sentinel id m_pad always reads 0.0
+    *,
+    m_pad: int,
+    M_pad: int,
+    n_chan: int,
+):
+    global TRACE_COUNT
+    TRACE_COUNT += 1
+    B = rack.shape[0]
+    carry0 = (
+        jnp.zeros((B, M_pad), jnp.float32),      # rack_free
+        jnp.zeros((B, n_chan), jnp.float32),     # chan_free
+        jnp.zeros((B, rack.shape[1]), jnp.float32),  # task_fin
+        jnp.zeros((B, m_pad + 1), jnp.float32),  # edge_fin (+1 sentinel col)
+    )
+    xs = (kind, op_task, op_edge, op_src, op_dst, op_p, op_wired, op_wireless,
+          op_local, op_in)
+
+    def step(carry, x):
+        kind_t, t_v, e_id, u, v, p_v, q_w, q_wl, r_l, in_row = x
+
+        def do_task(carry):
+            rack_free, chan_free, task_fin, edge_fin = carry
+            ready = jnp.max(jnp.take(edge_fin, in_row, axis=1), axis=1)
+            rv = jnp.take(rack, t_v, axis=1)
+            free_v = jnp.take_along_axis(rack_free, rv[:, None], axis=1)[:, 0]
+            fin = jnp.maximum(ready, free_v) + p_v
+            rack_free = jnp.where(
+                jax.nn.one_hot(rv, M_pad, dtype=bool), fin[:, None], rack_free
+            )
+            task_fin = task_fin.at[:, t_v].set(fin)
+            return rack_free, chan_free, task_fin, edge_fin
+
+        def do_edge(carry):
+            rack_free, chan_free, task_fin, edge_fin = carry
+            ready = jnp.take(task_fin, u, axis=1)
+            same = jnp.take(rack, u, axis=1) == jnp.take(rack, v, axis=1)
+            # Local path: no resource, duration r.
+            fin_local = ready + r_l
+            # Network path: earliest-finish channel (0 wired, 1.. wireless).
+            durs = jnp.concatenate(
+                [q_w[None], jnp.broadcast_to(q_wl, (n_chan - 1,))]
+            )
+            s = jnp.maximum(ready[:, None], chan_free)
+            f = s + durs[None, :]
+            best = jnp.argmin(f, axis=1)
+            fin_net = jnp.take_along_axis(f, best[:, None], axis=1)[:, 0]
+            new_free = jnp.where(
+                jax.nn.one_hot(best, n_chan, dtype=bool), fin_net[:, None], chan_free
+            )
+            chan_free = jnp.where(same[:, None], chan_free, new_free)
+            fin = jnp.where(same, fin_local, fin_net)
+            edge_fin = edge_fin.at[:, e_id].set(fin)
+            return rack_free, chan_free, task_fin, edge_fin
+
+        return jax.lax.switch(kind_t, (do_task, do_edge, lambda c: c), carry), None
+
+    (_, _, task_fin, _), _ = jax.lax.scan(step, carry0, xs)
+    return jnp.max(task_fin, axis=1)
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_evaluator(n_dev: int, m_pad: int, M_pad: int, n_chan: int):
+    """Jitted (and, with >1 local device, shard_map-sharded) scan evaluator.
+
+    The returned callable is cached per (device count, static dims); jit then
+    caches per concrete table/batch shape — so any two instances in the same
+    size bucket share one compiled program.
     """
+    core = functools.partial(
+        _scan_evaluate, m_pad=m_pad, M_pad=M_pad, n_chan=n_chan
+    )
+    if n_dev <= 1:
+        return jax.jit(core)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    # Local devices only: batch padding in make_batched_evaluator is sized by
+    # local_device_count, and each process shards its own host-local batch.
+    mesh = Mesh(np.asarray(jax.local_devices()), ("b",))
+    rep1, rep2 = P(None), P(None, None)
+    sharded = shard_map(
+        core,
+        mesh=mesh,
+        in_specs=(P("b", None), rep1, rep1, rep1, rep1, rep1, rep1, rep1,
+                  rep1, rep1, rep2),
+        out_specs=P("b"),
+        check_rep=False,
+    )
+    return jax.jit(sharded)
+
+
+@dataclasses.dataclass(frozen=True)
+class _EvalTables:
+    """Device-ready padded op tables plus the static dims of their bucket."""
+
+    kind: jax.Array
+    op_task: jax.Array
+    op_edge: jax.Array
+    op_src: jax.Array
+    op_dst: jax.Array
+    op_p: jax.Array
+    op_wired: jax.Array
+    op_wireless: jax.Array
+    op_local: jax.Array
+    op_in: jax.Array
+    n_pad: int
+    m_pad: int
+    M_pad: int
+    n_chan: int
+
+
+def _build_eval_tables(inst: ProblemInstance, use_wireless: bool) -> _EvalTables:
     job = inst.job
     n, m, M = job.n_tasks, job.n_edges, inst.n_racks
     n_chan = 1 + (inst.n_wireless if use_wireless else 0)
-    order = _op_order(inst)
-    p = jnp.asarray(job.p, dtype=jnp.float32)
-    q = jnp.asarray(inst.q_wired, dtype=jnp.float32)
-    qw = jnp.asarray(inst.q_wireless, dtype=jnp.float32)
-    r = jnp.asarray(inst.r_local, dtype=jnp.float32)
-    edges = job.edges
+    tables = build_op_tables(inst)
 
-    @jax.jit
-    def evaluate(rack: jax.Array) -> jax.Array:
+    n_ops = _bucket(tables.n_ops)
+    n_pad = _bucket(n)
+    m_pad = _bucket(max(m, 1))
+    M_pad = _bucket(M, lo=2)
+    indeg_pad = _bucket(tables.task_in_edges.shape[1], lo=4)
+
+    kind = np.full(n_ops, OP_PAD, dtype=np.int32)
+    op_task = np.zeros(n_ops, dtype=np.int32)
+    op_edge = np.zeros(n_ops, dtype=np.int32)
+    op_src = np.zeros(n_ops, dtype=np.int32)
+    op_dst = np.zeros(n_ops, dtype=np.int32)
+    op_p = np.zeros(n_ops, dtype=np.float32)
+    op_wired = np.zeros(n_ops, dtype=np.float32)
+    op_wireless = np.zeros(n_ops, dtype=np.float32)
+    op_local = np.zeros(n_ops, dtype=np.float32)
+    # Sentinel edge id m_pad indexes the always-zero extra column of edge_fin.
+    op_in = np.full((n_ops, indeg_pad), m_pad, dtype=np.int32)
+
+    q, qw, r = inst.q_wired, inst.q_wireless, inst.r_local
+    for row in range(tables.n_ops):
+        k, i = int(tables.kind[row]), int(tables.idx[row])
+        kind[row] = k
+        if k == OP_TASK:
+            op_task[row] = i
+            op_p[row] = job.p[i]
+            ins = tables.task_in_edges[i]
+            ins = ins[ins >= 0]
+            op_in[row, : ins.size] = ins
+        else:
+            op_edge[row] = i
+            op_src[row] = tables.edge_src[i]
+            op_dst[row] = tables.edge_dst[i]
+            op_wired[row] = q[i]
+            op_wireless[row] = qw[i]
+            op_local[row] = r[i]
+
+    return _EvalTables(
+        kind=jnp.asarray(kind),
+        op_task=jnp.asarray(op_task),
+        op_edge=jnp.asarray(op_edge),
+        op_src=jnp.asarray(op_src),
+        op_dst=jnp.asarray(op_dst),
+        op_p=jnp.asarray(op_p),
+        op_wired=jnp.asarray(op_wired),
+        op_wireless=jnp.asarray(op_wireless),
+        op_local=jnp.asarray(op_local),
+        op_in=jnp.asarray(op_in),
+        n_pad=n_pad,
+        m_pad=m_pad,
+        M_pad=M_pad,
+        n_chan=n_chan,
+    )
+
+
+def make_batched_evaluator(inst: ProblemInstance, use_wireless: bool = True):
+    """Build a fn: rack[B, n] int -> makespan[B] float32 (greedy non-delay).
+
+    The returned callable pads its batch to the evaluator's size bucket
+    (batch to a power of two times the local device count, tasks to the
+    bucket task count) and dispatches the shared compiled scan program —
+    identical instances never retrace, and instances of similar size share
+    one compiled program per bucket.
+    """
+    t = _build_eval_tables(inst, use_wireless)
+    n = inst.job.n_tasks
+    n_dev = jax.local_device_count()
+    fn = _compiled_evaluator(n_dev, t.m_pad, t.M_pad, t.n_chan)
+    table_args = (
+        t.kind, t.op_task, t.op_edge, t.op_src, t.op_dst, t.op_p,
+        t.op_wired, t.op_wireless, t.op_local, t.op_in,
+    )
+
+    def evaluate(rack) -> jax.Array:
+        rack = np.asarray(rack, dtype=np.int32)
         B = rack.shape[0]
-        rack_free = jnp.zeros((B, M), dtype=jnp.float32)
-        chan_free = jnp.zeros((B, n_chan), dtype=jnp.float32)
-        task_fin = jnp.zeros((B, n), dtype=jnp.float32)
-        edge_fin = jnp.zeros((B, m), dtype=jnp.float32) if m else None
+        B_pad = _bucket(B) * (n_dev if _bucket(B) % n_dev else 1)
+        padded = np.zeros((B_pad, t.n_pad), dtype=np.int32)
+        padded[:B, :n] = rack
+        return fn(jnp.asarray(padded), *table_args)[:B]
 
-        for kind, idx in order:
-            if kind == "E":
-                e = idx
-                u, v = int(edges[e, 0]), int(edges[e, 1])
-                ready = task_fin[:, u]
-                same = rack[:, u] == rack[:, v]
-                # Local path: no resource, duration r.
-                fin_local = ready + r[e]
-                # Network path: earliest-finish channel (0 wired, 1.. wireless).
-                durs = jnp.concatenate(
-                    [
-                        jnp.full((B, 1), q[e]),
-                        jnp.broadcast_to(qw[e], (B, n_chan - 1)),
-                    ],
-                    axis=1,
-                ) if n_chan > 1 else jnp.full((B, 1), q[e])
-                s = jnp.maximum(ready[:, None], chan_free)
-                f = s + durs
-                best = jnp.argmin(f, axis=1)
-                fin_net = jnp.take_along_axis(f, best[:, None], axis=1)[:, 0]
-                new_free = jnp.where(
-                    jax.nn.one_hot(best, n_chan, dtype=bool),
-                    fin_net[:, None],
-                    chan_free,
-                )
-                chan_free = jnp.where(same[:, None], chan_free, new_free)
-                fin = jnp.where(same, fin_local, fin_net)
-                edge_fin = edge_fin.at[:, e].set(fin)
-            else:
-                v = idx
-                ready = jnp.zeros((rack.shape[0],), dtype=jnp.float32)
-                for e in job.in_edges(v):
-                    ready = jnp.maximum(ready, edge_fin[:, int(e)])
-                rv = rack[:, v].astype(jnp.int32)
-                free_v = jnp.take_along_axis(rack_free, rv[:, None], axis=1)[:, 0]
-                s = jnp.maximum(ready, free_v)
-                fin = s + p[v]
-                rack_free = jnp.where(
-                    jax.nn.one_hot(rv, M, dtype=bool), fin[:, None], rack_free
-                )
-                task_fin = task_fin.at[:, v].set(fin)
-
-        return jnp.max(task_fin, axis=1)
-
+    evaluate.tables = t
     return evaluate
 
 
+# ---------------------------------------------------------------------------
+# Stage-1 bound: Pallas cpm kernel over dense max-plus adjacency
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_pad",))
+def _dense_maxplus_w(racks, src, dst, p_src, r, netc, *, n_pad: int):
+    """w[B, n_pad, n_pad] max-plus adjacency per candidate assignment.
+
+    Edge positions are identical across the batch, so this is one batched
+    static-index scatter (edges are unique by construction; padded edges all
+    write -inf at (0, 0), which no real edge can occupy — self-loops are
+    rejected by DagJob). Padded nodes have no incident edges, so their dist
+    stays 0 and never dominates the final max.
+    """
+    cost = jnp.where(racks[:, src] == racks[:, dst], r, netc) + p_src
+    w = jnp.full((racks.shape[0], n_pad, n_pad), -jnp.inf, dtype=jnp.float32)
+    # No unique_indices: every padded edge writes -inf at (0, 0).
+    return w.at[:, src, dst].set(cost, mode="drop")
+
+
 def batched_lower_bound(
-    inst: ProblemInstance, racks: np.ndarray, use_kernel: bool = False
+    inst: ProblemInstance,
+    racks: np.ndarray,
+    use_kernel: bool = False,
+    block_b: int = 1024,
 ) -> np.ndarray:
     """Critical-path LB per assignment via iterated max-plus relaxation.
 
     dist[v] >= dist[u] + p_u + cost(u, v) where cost is r (same rack) or the
     optimistic network duration (different racks). Converges in <= depth
-    iterations; we run n-1 (the max possible DAG depth).
+    iterations.
+
+    With ``use_kernel=True`` the relaxation runs through the Pallas ``cpm``
+    kernel (`repro.kernels.ops.batched_critical_path`) on dense size-bucketed
+    adjacency blocks — the production stage-1 path of `vectorized_search`.
+    The edge-list jit path is the portable reference oracle.
     """
     job = inst.job
     n, m = job.n_tasks, job.n_edges
+    racks = np.asarray(racks, dtype=np.int32)
     if m == 0:
-        return np.broadcast_to(np.max(job.p), (racks.shape[0],)).astype(np.float32)
+        return np.broadcast_to(
+            np.float32(np.max(job.p)), (racks.shape[0],)
+        ).astype(np.float32)
     net = np.minimum(inst.q_wired, inst.q_wireless) if inst.n_wireless else inst.q_wired
 
     p = jnp.asarray(job.p, dtype=jnp.float32)
     r = jnp.asarray(inst.r_local, dtype=jnp.float32)
     netc = jnp.asarray(net, dtype=jnp.float32)
-    src = jnp.asarray(job.edges[:, 0])
-    dst = jnp.asarray(job.edges[:, 1])
+    src = jnp.asarray(job.edges[:, 0].astype(np.int32))
+    dst = jnp.asarray(job.edges[:, 1].astype(np.int32))
 
     if use_kernel:
         from repro.kernels import ops as kops
 
-        # Dense max-plus adjacency per batch element.
-        def build_w(rk):
-            cost = jnp.where(rk[src] == rk[dst], r, netc) + p[src]
-            w = jnp.full((n, n), -jnp.inf, dtype=jnp.float32)
-            return w.at[src, dst].max(cost)
-
-        w = jax.vmap(build_w)(jnp.asarray(racks))
-        dist = kops.batched_critical_path(w)
-        return np.asarray(jnp.max(dist + p[None, :], axis=1))
+        B = racks.shape[0]
+        B_pad = _bucket(B)
+        n_pad = _bucket(n)
+        m_pad = _bucket(m, lo=1)
+        # Bucket every dim so the build + kernel compile once per bucket:
+        # padded batch rows are zero-filled (sliced off before return),
+        # padded edges scatter -inf (a no-op).
+        racks_pad = np.zeros((B_pad, n), dtype=np.int32)
+        racks_pad[:B] = racks
+        src_pad = np.zeros(m_pad, dtype=np.int32)
+        dst_pad = np.zeros(m_pad, dtype=np.int32)
+        src_pad[:m] = job.edges[:, 0]
+        dst_pad[:m] = job.edges[:, 1]
+        cost_pad = np.full((3, m_pad), -np.inf, dtype=np.float32)
+        cost_pad[0, :m] = job.p[job.edges[:, 0]]
+        cost_pad[1, :m] = inst.r_local
+        cost_pad[2, :m] = net
+        w = _dense_maxplus_w(
+            jnp.asarray(racks_pad),
+            jnp.asarray(src_pad),
+            jnp.asarray(dst_pad),
+            jnp.asarray(cost_pad[0]),
+            jnp.asarray(cost_pad[1]),
+            jnp.asarray(cost_pad[2]),
+            n_pad=n_pad,
+        )
+        dist = kops.batched_critical_path(
+            w, block_b=min(block_b, B_pad), n_iters=n - 1
+        )
+        p_full = jnp.zeros(n_pad, jnp.float32).at[:n].set(p)
+        return np.asarray(jnp.max(dist + p_full[None, :], axis=1))[:B]
 
     @jax.jit
     def lb(rk: jax.Array) -> jax.Array:
-        cost = jnp.where(rk[:, :][:, src] == rk[:, :][:, dst], r, netc)
+        cost = jnp.where(rk[:, src] == rk[:, dst], r, netc)
         B = rk.shape[0]
         dist = jnp.zeros((B, n), dtype=jnp.float32)
 
@@ -203,12 +432,49 @@ def batched_lower_bound(
     return np.asarray(lb(jnp.asarray(racks)))
 
 
+# ---------------------------------------------------------------------------
+# Search driver: LB-pruned batch sweep + local-search refinement
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass
 class VectorizedResult:
     schedule: Schedule
     makespan: float
     n_evaluated: int
     best_assignment: np.ndarray
+    n_candidates: int = 0
+    n_pruned: int = 0
+    refine_rounds: int = 0
+
+
+def _mutate_pool(
+    rng: np.random.Generator,
+    best: np.ndarray,
+    inst: ProblemInstance,
+    count: int,
+) -> np.ndarray:
+    """Seeded local-search mutations of the incumbent assignment.
+
+    Mix of single-task resamples, co-locations along DAG edges (move the two
+    endpoints of a transfer onto one rack), and rack swaps between two tasks.
+    """
+    n, M = best.shape[0], inst.n_racks
+    pool = np.tile(best.astype(np.int32), (count, 1))
+    kind = rng.integers(0, 3, size=count)
+    edges = inst.job.edges
+    for i in range(count):
+        if kind[i] == 0 or edges.shape[0] == 0:
+            # Resample 1-2 random coordinates.
+            for v in rng.integers(0, n, size=int(rng.integers(1, 3))):
+                pool[i, v] = rng.integers(0, M)
+        elif kind[i] == 1:
+            e = int(rng.integers(0, edges.shape[0]))
+            u, v = int(edges[e, 0]), int(edges[e, 1])
+            pool[i, v] = pool[i, u]
+        else:
+            u, v = rng.integers(0, n, size=2)
+            pool[i, u], pool[i, v] = pool[i, v], pool[i, u]
+    return pool
 
 
 def vectorized_search(
@@ -217,44 +483,119 @@ def vectorized_search(
     n_samples: int = 8192,
     seed: int = 0,
     use_wireless: bool = True,
-    batch_size: int = 65536,
+    batch_size: int = 8192,
+    lb_prune: bool = True,
+    use_kernel: bool = True,
+    refine_rounds: int = 4,
+    refine_pool: int = 1024,
 ) -> VectorizedResult:
-    """Best-of-batch schedule search.
+    """Best-of-batch schedule search with bound-driven pruning.
 
     Enumerates all canonical assignments when that is small enough, else
-    samples. The winner is re-executed with the exact host simulator (which
-    can only improve on the vectorized non-delay score) and verified.
+    samples. Each batch first passes through the Pallas critical-path bound
+    (stage 1); only candidates whose bound beats the incumbent are scheduled
+    by the batched greedy evaluator (stage 2). In the sampled regime a
+    local-search refinement loop mutates the incumbent until no round
+    improves it. The winner is re-executed with the exact host simulator
+    (which can only improve on the vectorized non-delay score) and verified.
     """
     job = inst.job
     n, M = job.n_tasks, inst.n_racks
     # Bell-number guard: enumerate if the canonical count fits the budget.
     cands = enumerate_assignments(n, M, limit=max_enumerate + 1)
-    if cands.shape[0] > max_enumerate:
+    sampled = cands.shape[0] > max_enumerate
+    if sampled:
         rng = np.random.default_rng(seed)
         cands = np.concatenate(
             [
-                enumerate_assignments(n, min(2, M)),
+                enumerate_assignments(n, min(2, M), limit=n_samples),
                 sample_assignments(rng, n, M, n_samples),
             ],
             axis=0,
         )
     evaluate = make_batched_evaluator(inst, use_wireless=use_wireless)
+
     best_val = np.inf
     best_rack: np.ndarray | None = None
     n_eval = 0
-    for i in range(0, cands.shape[0], batch_size):
-        chunk = cands[i : i + batch_size]
-        vals = np.asarray(evaluate(jnp.asarray(chunk)))
-        n_eval += chunk.shape[0]
+    n_pruned = 0
+    n_cands = 0
+    # Stage-1 survivors queue here and are scored in fixed-size batches, so
+    # the whole search compiles exactly one stage-2 program shape no matter
+    # how pruning fragments the candidate stream.
+    buffer: list[np.ndarray] = []
+    buffered = 0
+
+    def score(chunk: np.ndarray) -> None:
+        nonlocal best_val, best_rack, n_eval
+        true_b = chunk.shape[0]
+        if true_b < batch_size:
+            # Pad partial flushes to the one stage-2 batch shape (repeats of
+            # row 0 are discarded below) so pruning's fragmentation never
+            # triggers a fresh compile.
+            chunk = np.concatenate(
+                [chunk, np.tile(chunk[:1], (batch_size - true_b, 1))], axis=0
+            )
+        vals = np.asarray(evaluate(chunk))[:true_b]
+        n_eval += true_b
         j = int(np.argmin(vals))
         if vals[j] < best_val:
             best_val = float(vals[j])
             best_rack = chunk[j].astype(np.int64)
+
+    def flush(partial: bool = False) -> None:
+        nonlocal buffer, buffered
+        if not buffered:
+            return
+        pool = np.concatenate(buffer, axis=0) if len(buffer) > 1 else buffer[0]
+        n_full = (pool.shape[0] // batch_size) * batch_size
+        for i in range(0, n_full, batch_size):
+            score(pool[i : i + batch_size])
+        tail = pool[n_full:]
+        if partial and tail.shape[0]:
+            score(tail)
+            tail = tail[:0]
+        buffer = [tail] if tail.shape[0] else []
+        buffered = tail.shape[0]
+
+    def consider(chunk: np.ndarray) -> None:
+        nonlocal n_pruned, n_cands, buffered
+        n_cands += chunk.shape[0]
+        if lb_prune and np.isfinite(best_val):
+            lbs = batched_lower_bound(inst, chunk, use_kernel=use_kernel)
+            keep = lbs < best_val - 1e-6
+            n_pruned += int((~keep).sum())
+            chunk = chunk[keep]
+        if chunk.shape[0] == 0:
+            return
+        buffer.append(chunk)
+        buffered += chunk.shape[0]
+        if buffered >= batch_size:
+            flush()
+
+    for i in range(0, cands.shape[0], batch_size):
+        consider(cands[i : i + batch_size])
+    flush(partial=True)
     assert best_rack is not None
+
+    rounds_run = 0
+    if sampled and refine_rounds > 0:
+        rng = np.random.default_rng(seed + 1)
+        for _ in range(refine_rounds):
+            prev = best_val
+            consider(_mutate_pool(rng, best_rack, inst, refine_pool))
+            flush(partial=True)
+            rounds_run += 1
+            if best_val >= prev - 1e-9:
+                break
+
     sched = simulate(inst, best_rack, use_wireless=use_wireless)
     return VectorizedResult(
         schedule=sched,
         makespan=sched.makespan,
         n_evaluated=n_eval,
         best_assignment=best_rack,
+        n_candidates=n_cands,
+        n_pruned=n_pruned,
+        refine_rounds=rounds_run,
     )

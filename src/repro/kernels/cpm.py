@@ -26,7 +26,7 @@ __all__ = ["batched_critical_path"]
 NEG_INF = -1e30
 
 
-def _kernel(w_ref, o_ref, *, n: int, bb: int):
+def _kernel(w_ref, o_ref, *, n: int, bb: int, n_iters: int):
     w = w_ref[...]  # [bb, n, n]
     dist = jnp.zeros((bb, n), jnp.float32)
 
@@ -35,24 +35,34 @@ def _kernel(w_ref, o_ref, *, n: int, bb: int):
         cand = dist[:, :, None] + w
         return jnp.maximum(dist, jnp.max(cand, axis=1))
 
-    dist = jax.lax.fori_loop(0, n - 1, body, dist)
+    dist = jax.lax.fori_loop(0, n_iters, body, dist)
     o_ref[...] = dist
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "n_iters", "interpret"))
 def batched_critical_path(
     w: jax.Array,  # [B, n, n] float32 max-plus adjacency (-inf = no edge)
     block_b: int = 8,
+    n_iters: int | None = None,
     interpret: bool = False,
 ) -> jax.Array:
+    """dist[B, n]: longest path into each node by Bellman relaxation rounds.
+
+    ``n_iters`` bounds the relaxation count (default n-1, the worst-case DAG
+    depth). Callers that pad graphs to a size bucket should pass the true
+    depth bound so padding does not add rounds.
+    """
     B, n, _ = w.shape
+    if n_iters is None:
+        n_iters = n - 1
+    n_iters = max(0, min(n_iters, n - 1))
     bb = min(block_b, B)
     pad = (-B) % bb
     w = jnp.where(jnp.isfinite(w), w, NEG_INF).astype(jnp.float32)
     if pad:
         w = jnp.concatenate([w, jnp.full((pad, n, n), NEG_INF, jnp.float32)], 0)
     out = pl.pallas_call(
-        functools.partial(_kernel, n=n, bb=bb),
+        functools.partial(_kernel, n=n, bb=bb, n_iters=n_iters),
         grid=((B + pad) // bb,),
         in_specs=[pl.BlockSpec((bb, n, n), lambda b: (b, 0, 0))],
         out_specs=pl.BlockSpec((bb, n), lambda b: (b, 0)),

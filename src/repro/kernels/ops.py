@@ -10,11 +10,31 @@ from __future__ import annotations
 
 import jax
 
+
+def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
+    """Version-compat constructor for Pallas TPU compiler params.
+
+    Newer JAX exposes ``pltpu.CompilerParams``; the pinned 0.4.x series calls
+    it ``TPUCompilerParams``.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(dimension_semantics=dimension_semantics)
+
+
 from repro.kernels.cpm import batched_critical_path as _cpm
 from repro.kernels.decode_attention import decode_attention_fwd as _decode
 from repro.kernels.flash_attention import flash_attention_fwd as _flash
 
-__all__ = ["flash_attention", "decode_attention", "batched_critical_path"]
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "batched_critical_path",
+    "tpu_compiler_params",
+]
 
 
 def _interpret() -> bool:
@@ -32,5 +52,5 @@ def decode_attention(q, k, v, kv_len, block_kv=512):
     return _decode(q, k, v, kv_len, block_kv=block_kv, interpret=_interpret())
 
 
-def batched_critical_path(w, block_b=8):
-    return _cpm(w, block_b=block_b, interpret=_interpret())
+def batched_critical_path(w, block_b=8, n_iters=None):
+    return _cpm(w, block_b=block_b, n_iters=n_iters, interpret=_interpret())

@@ -5,6 +5,9 @@ contract). Plus the paper-pipeline integration test."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # end-to-end train/crash/restore loops
 
 from repro.checkpoint import ckpt
 from repro.configs import smoke_config

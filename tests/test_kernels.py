@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # interpret-mode oracle sweeps dominate suite wall time
+
 from repro.kernels import ops
 from repro.kernels.ref import (
     ref_critical_path,

@@ -2,6 +2,10 @@
 
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the 'test' extra (pip install -e .[test])"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -61,3 +61,103 @@ def test_batched_lb_matches_kernel_path(seed=0):
     a = batched_lower_bound(inst, cands, use_kernel=False)
     b = batched_lower_bound(inst, cands, use_kernel=True)
     np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("seed", range(3))
+def test_lb_opt_greedy_sandwich(seed, use_kernel):
+    """min LB <= exact optimum <= vectorized greedy score, on both LB paths."""
+    inst = make_instance(seed, n_tasks=5, n_racks=3)
+    cands = enumerate_assignments(inst.job.n_tasks, inst.n_racks)
+    lbs = batched_lower_bound(inst, cands, use_kernel=use_kernel)
+    opt = solve_bnb(inst, time_limit=30)
+    res = vectorized_search(inst, use_kernel=use_kernel)
+    assert float(lbs.min()) <= opt.makespan + 1e-3
+    assert opt.makespan <= res.makespan + 0.15
+    # per-assignment: LB never exceeds that assignment's greedy score
+    evaluate = make_batched_evaluator(inst)
+    scores = np.asarray(evaluate(cands))
+    assert (lbs <= scores + 1e-3).all()
+
+
+def test_lb_pruning_is_exact_and_counted():
+    """Pruned search returns the same winner as the unpruned sweep, and the
+    candidate accounting (evaluated + pruned = considered) holds."""
+    inst = make_instance(1, n_tasks=7, n_racks=4)
+    pruned = vectorized_search(inst, batch_size=64)
+    full = vectorized_search(inst, batch_size=64, lb_prune=False)
+    assert pruned.makespan == pytest.approx(full.makespan, abs=1e-6)
+    assert pruned.n_evaluated + pruned.n_pruned == pruned.n_candidates
+    assert full.n_pruned == 0 and full.n_evaluated == full.n_candidates
+    assert pruned.n_evaluated <= full.n_evaluated
+
+
+def test_size_bucket_shares_compiled_program():
+    """Two different instances in the same size bucket must not retrace the
+    scan evaluator (the no-per-instance-recompile contract)."""
+    from repro.core import vectorized as V
+    from repro.core.dag import make_onestage_mapreduce
+
+    insts = [
+        ProblemInstance(
+            job=make_onestage_mapreduce(
+                np.random.default_rng(s), n_map=3, n_reduce=3, rho=1.0
+            ),
+            n_racks=3,
+            n_wireless=1,
+        )
+        for s in (10, 11)
+    ]
+    cands = enumerate_assignments(6, 3)
+    evaluate0 = make_batched_evaluator(insts[0])
+    v0 = np.asarray(evaluate0(cands))
+    before = V.TRACE_COUNT
+    evaluate1 = make_batched_evaluator(insts[1])
+    out = np.asarray(evaluate1(cands))
+    assert V.TRACE_COUNT == before, "same-bucket instance retraced the scan"
+    assert out.shape == (cands.shape[0],) and (out > 0).all()
+    assert not np.allclose(v0, out)  # different durations, same program
+
+
+def test_refinement_never_hurts_sampled_regime():
+    inst = make_instance(3, n_tasks=11, n_racks=6)
+    base = vectorized_search(
+        inst, max_enumerate=1000, n_samples=512, refine_rounds=0
+    )
+    refined = vectorized_search(
+        inst, max_enumerate=1000, n_samples=512, refine_rounds=4
+    )
+    assert refined.makespan <= base.makespan + 1e-6
+    assert refined.refine_rounds >= 1
+
+
+@pytest.mark.slow
+def test_sharded_evaluator_matches_single_device():
+    """shard_map path on 4 forced host devices agrees with 1-device scores."""
+    import subprocess
+    import sys
+
+    code = (
+        "import numpy as np, jax\n"
+        "assert jax.local_device_count() == 4\n"
+        "from repro.core.vectorized import make_batched_evaluator, "
+        "enumerate_assignments\n"
+        "from repro.core import ProblemInstance, random_job\n"
+        "rng = np.random.default_rng(0)\n"
+        "job = random_job(rng, None, n_tasks=5, rho=1.0)\n"
+        "inst = ProblemInstance(job=job, n_racks=3, n_wireless=1)\n"
+        "cands = enumerate_assignments(5, 3)\n"
+        "print(repr(np.asarray(make_batched_evaluator(inst)(cands)).tolist()))\n"
+    )
+    import os
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True
+    )
+    assert out.returncode == 0, out.stderr
+    sharded = np.asarray(eval(out.stdout.strip().splitlines()[-1]))
+    inst = make_instance(0, n_tasks=5, n_racks=3)
+    local = np.asarray(make_batched_evaluator(inst)(enumerate_assignments(5, 3)))
+    np.testing.assert_allclose(sharded, local, rtol=1e-5, atol=1e-4)

@@ -23,13 +23,25 @@ from repro.core.dag import (
 )
 from repro.core.instance import CH_LOCAL, CH_WIRED, ProblemInstance
 from repro.core.schedule import FeasibilityError, Schedule, check_feasible
-from repro.core.bounds import lower_bound, longest_branch, upper_bound
+from repro.core.bounds import (
+    contention_lower_bounds,
+    lower_bound,
+    longest_branch,
+    network_work_bounds,
+    rack_load_bounds,
+    upper_bound,
+)
 from repro.core.simulator import simulate
 from repro.core.milp import build_rp, extract_schedule
 from repro.core.solver_milp import MilpResult, solve_optimal, solve_rp
 from repro.core.bisection import BisectionResult, solve_bisection
 from repro.core.bnb import BnbResult, solve_bnb
-from repro.core.vectorized import VectorizedResult, vectorized_search
+from repro.core.vectorized import (
+    FleetResult,
+    VectorizedResult,
+    schedule_fleet,
+    vectorized_search,
+)
 from repro.core.baselines import (
     BASELINES,
     g_list_master_schedule,
@@ -47,12 +59,14 @@ __all__ = [
     "CH_LOCAL", "CH_WIRED", "ProblemInstance",
     "FeasibilityError", "Schedule", "check_feasible",
     "lower_bound", "longest_branch", "upper_bound",
+    "contention_lower_bounds", "network_work_bounds", "rack_load_bounds",
     "simulate",
     "build_rp", "extract_schedule",
     "MilpResult", "solve_optimal", "solve_rp",
     "BisectionResult", "solve_bisection",
     "BnbResult", "solve_bnb",
     "VectorizedResult", "vectorized_search",
+    "FleetResult", "schedule_fleet",
     "BASELINES", "g_list_master_schedule", "g_list_schedule", "list_schedule",
     "partition_schedule", "random_schedule", "single_rack_schedule",
     "wired_only",

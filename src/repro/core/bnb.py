@@ -394,42 +394,10 @@ class _GT:
                 return
 
 
-def _assignment_lb(inst: ProblemInstance, rack, topo, min_cost) -> float:
-    """LB for a partial assignment: optimistic critical path + rack loads +
-    aggregate channel work (generalizes the paper's T_min to partial info)."""
-    job = inst.job
-    cost = min_cost.copy()
-    for e in range(job.n_edges):
-        u, v = int(job.edges[e, 0]), int(job.edges[e, 1])
-        if rack[u] >= 0 and rack[v] >= 0:
-            if rack[u] == rack[v]:
-                cost[e] = inst.r_local[e]
-            else:
-                cost[e] = (
-                    min(inst.q_wired[e], inst.q_wireless[e])
-                    if inst.n_wireless
-                    else inst.q_wired[e]
-                )
-    dist = bounds_mod.critical_path_dist(job.n_tasks, job.edges, job.p, cost, topo)
-    lb = float(np.max(dist + job.p))
-    for i in range(inst.n_racks):
-        sel = rack == i
-        if sel.any():
-            load = float(job.p[sel].sum())
-            if load > lb:
-                lb = load
-    work = 0.0
-    for e in range(job.n_edges):
-        u, v = int(job.edges[e, 0]), int(job.edges[e, 1])
-        if rack[u] >= 0 and rack[v] >= 0 and rack[u] != rack[v]:
-            work += (
-                min(inst.q_wired[e], inst.q_wireless[e])
-                if inst.n_wireless
-                else inst.q_wired[e]
-            )
-    if work > 0.0:
-        lb = max(lb, work / (1 + inst.n_wireless))
-    return lb
+# The level-1 partial-assignment bound lives in repro.core.bounds so the
+# B&B pruner, the vectorized stage-1 pruner, and the property tests all
+# share one §IV-A implementation.
+_assignment_lb = bounds_mod.partial_assignment_bound
 
 
 def solve_fixed_assignment(
@@ -477,8 +445,19 @@ def solve_bnb(
     inst: ProblemInstance,
     time_limit: float | None = None,
     incumbent: Schedule | None = None,
+    assignment_bound=None,
 ) -> BnbResult:
-    """Exact two-level B&B. Returns the best (optimal unless timed out)."""
+    """Exact two-level B&B. Returns the best (optimal unless timed out).
+
+    ``assignment_bound`` is the level-1 bound hook: an optional callable
+    ``(inst, rack_partial) -> float`` (rack_partial[v] = -1 when undecided)
+    whose value is maxed with the built-in §IV-A partial-assignment bound
+    (:func:`repro.core.bounds.partial_assignment_bound`). It MUST be
+    admissible — never exceed the best completion time reachable from the
+    partial assignment — or optimality is lost. The vectorized fleet
+    scheduler shares the same bound family through this module's
+    ``_assignment_lb`` alias.
+    """
     t0 = time.perf_counter()
     job = inst.job
     n = job.n_tasks
@@ -512,7 +491,12 @@ def solve_bnb(
             proved = False
             return
         nodes_a += 1
-        if _assignment_lb(inst, rack, topo, min_cost) >= best_ub - 1e-9:
+        lb = _assignment_lb(inst, rack, topo, min_cost)
+        if assignment_bound is not None:
+            # Copy: the DFS mutates this buffer after the frame returns, so
+            # a hook that retains its argument must not see it rewritten.
+            lb = max(lb, float(assignment_bound(inst, rack.copy())))
+        if lb >= best_ub - 1e-9:
             return
         if pos == n:
             # Leaf-local heuristic incumbent before exact sequencing.

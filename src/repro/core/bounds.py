@@ -11,6 +11,29 @@ The paper's Algorithm 1 uses the LOCAL delay r as the per-edge transfer cost,
 which is a valid lower bound whenever local transfer is never slower than a
 network transfer (true in the paper's experiments where r = 0). ``safe=True``
 instead uses min(r_e, q_e, q̌_e), which is a valid bound for arbitrary rates.
+
+Assignment-conditional load bounds (§IV-A resource terms)
+---------------------------------------------------------
+Once a task->rack assignment x is fixed, two contention terms sharpen the
+contention-free critical path (which several dense seeds cannot prune with
+at all):
+
+  * per-rack work   — racks are unary compute resources (constraint (5)),
+    so makespan >= max_i Σ_{v: x_v = i} p_v
+    (:func:`rack_load_bounds`; maps job.p onto the rack axis).
+  * aggregate channel work — every cross-rack edge must occupy exactly one
+    of the 1 + |K| network channels (wired ``b`` of rate B_s, constraint (8),
+    plus the orthogonal wireless subchannels of rate B, constraint (9)) for
+    at least min(q_(u,v), q̌_(u,v)) = d_(u,v) / max(B_s, B) time units, so
+    makespan >= Σ_{(u,v): x_u != x_v} min(q, q̌) / (1 + |K|)
+    (:func:`network_work_bounds`; maps job.d through q_wired / q_wireless).
+
+Each term individually lower-bounds the optimal makespan for that
+assignment AND the batched greedy evaluator's non-delay score, so
+max(critical_path, rack_load, network_work) is admissible both for exact
+B&B pruning and for the vectorized stage-1 pruner
+(:func:`repro.core.vectorized.batched_lower_bound`, fused on-device via
+:func:`repro.kernels.ops.batched_combined_lb`).
 """
 
 from __future__ import annotations
@@ -19,7 +42,16 @@ import numpy as np
 
 from repro.core.instance import ProblemInstance
 
-__all__ = ["upper_bound", "lower_bound", "longest_branch", "critical_path_dist"]
+__all__ = [
+    "upper_bound",
+    "lower_bound",
+    "longest_branch",
+    "critical_path_dist",
+    "rack_load_bounds",
+    "network_work_bounds",
+    "contention_lower_bounds",
+    "partial_assignment_bound",
+]
 
 
 def upper_bound(inst: ProblemInstance) -> float:
@@ -68,3 +100,91 @@ def lower_bound(inst: ProblemInstance, safe: bool = True) -> float:
     """T_min. ``safe=True`` guards against instances where local transfer is
     slower than network transfer (not the paper's regime)."""
     return longest_branch(inst, safe=safe)
+
+
+def min_network_durations(inst: ProblemInstance) -> np.ndarray:
+    """Per-edge optimistic network transfer time: min(q, q̌) (q if |K| = 0)."""
+    if inst.n_wireless:
+        return np.minimum(inst.q_wired, inst.q_wireless)
+    return np.asarray(inst.q_wired)
+
+
+def rack_load_bounds(inst: ProblemInstance, racks: np.ndarray) -> np.ndarray:
+    """Per-assignment §IV-A rack-work bound: max_i Σ_{x_v = i} p_v.
+
+    ``racks``: int[B, n_tasks] batch of COMPLETE assignments; returns
+    float64[B]. Partial assignments (-1 sentinels) are rejected — wrapping
+    them onto the last rack would inflate the bound past admissibility; use
+    :func:`partial_assignment_bound` for partial information.
+    """
+    racks = np.asarray(racks)
+    if racks.size and racks.min() < 0:
+        raise ValueError("rack_load_bounds needs complete assignments (no -1)")
+    B, n = racks.shape
+    load = np.zeros((B, inst.n_racks), dtype=np.float64)
+    rows = np.arange(B)
+    for v in range(n):
+        load[rows, racks[:, v]] += inst.job.p[v]
+    return load.max(axis=1)
+
+
+def network_work_bounds(inst: ProblemInstance, racks: np.ndarray) -> np.ndarray:
+    """Per-assignment §IV-A channel-work bound.
+
+    Σ over cross-rack edges of min(q, q̌), divided by the 1 + |K| network
+    channels (wired ``b`` + wireless subchannels). float64[B].
+    """
+    racks = np.asarray(racks)
+    job = inst.job
+    if job.n_edges == 0:
+        return np.zeros(racks.shape[0], dtype=np.float64)
+    net = min_network_durations(inst)
+    cross = racks[:, job.edges[:, 0]] != racks[:, job.edges[:, 1]]
+    return (cross * net[None, :]).sum(axis=1) / (1 + inst.n_wireless)
+
+
+def contention_lower_bounds(inst: ProblemInstance, racks: np.ndarray) -> np.ndarray:
+    """max of the two assignment-conditional §IV-A load bounds. float64[B]."""
+    return np.maximum(
+        rack_load_bounds(inst, racks), network_work_bounds(inst, racks)
+    )
+
+
+def partial_assignment_bound(
+    inst: ProblemInstance,
+    rack: np.ndarray,
+    topo: np.ndarray,
+    min_cost: np.ndarray,
+) -> float:
+    """LB for a PARTIAL assignment (rack[v] = -1 when undecided): optimistic
+    critical path + per-rack work over assigned tasks + aggregate channel
+    work over decided cross-rack edges.
+
+    This is the §IV-A bound family generalized to partial information: the
+    shared bound hook of the combinatorial B&B
+    (:func:`repro.core.bnb.solve_bnb`) and the single-assignment special
+    case used by :func:`contention_lower_bounds`.
+    """
+    job = inst.job
+    cost = min_cost.copy()
+    net = min_network_durations(inst)
+    for e in range(job.n_edges):
+        u, v = int(job.edges[e, 0]), int(job.edges[e, 1])
+        if rack[u] >= 0 and rack[v] >= 0:
+            cost[e] = inst.r_local[e] if rack[u] == rack[v] else net[e]
+    dist = critical_path_dist(job.n_tasks, job.edges, job.p, cost, topo)
+    lb = float(np.max(dist + job.p))
+    for i in range(inst.n_racks):
+        sel = rack == i
+        if sel.any():
+            load = float(job.p[sel].sum())
+            if load > lb:
+                lb = load
+    work = 0.0
+    for e in range(job.n_edges):
+        u, v = int(job.edges[e, 0]), int(job.edges[e, 1])
+        if rack[u] >= 0 and rack[v] >= 0 and rack[u] != rack[v]:
+            work += net[e]
+    if work > 0.0:
+        lb = max(lb, work / (1 + inst.n_wireless))
+    return lb

@@ -27,7 +27,9 @@ __all__ = [
     "simulate",
     "critical_path_priority",
     "build_op_tables",
+    "pad_op_tables",
     "OpTables",
+    "PaddedOpTables",
     "AUTO_CHANNEL",
     "OP_TASK",
     "OP_EDGE",
@@ -107,6 +109,106 @@ def build_op_tables(inst: ProblemInstance) -> OpTables:
         edge_dst=job.edges[:, 1].astype(np.int32),
         task_in_edges=pad_table(in_lists),
         task_out_edges=pad_table(out_lists),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class PaddedOpTables:
+    """Device-layout op tables padded to a caller-chosen size bucket.
+
+    The SINGLE op-table layout shared by every batched evaluator: each row
+    of the interleaved (edge*, task) sequence is flattened into parallel
+    scalar columns so a ``lax.scan`` can walk it, and all columns are padded
+    with OP_PAD no-op rows up to ``n_ops``. Instances of a heterogeneous
+    fleet are padded to the SAME dims and stacked on a leading instance
+    axis, so one compiled mega-batch program serves them all.
+
+    Attributes:
+      kind: int32[n_ops] OP_TASK / OP_EDGE / OP_PAD.
+      op_task: int32[n_ops] task id on OP_TASK rows (0 otherwise).
+      op_edge: int32[n_ops] edge id on OP_EDGE rows (0 otherwise).
+      op_src / op_dst: int32[n_ops] edge endpoints on OP_EDGE rows.
+      op_p: float32[n_ops] task duration on OP_TASK rows.
+      op_wired / op_wireless / op_local: float32[n_ops] edge transfer
+        durations on OP_EDGE rows (q, q̌, r of §II).
+      op_in: int32[n_ops, indeg_pad] in-edge ids gating an OP_TASK row,
+        right-padded with ``edge_sentinel`` (an always-zero slot the
+        evaluator reserves past its edge-finish table).
+    """
+
+    kind: np.ndarray
+    op_task: np.ndarray
+    op_edge: np.ndarray
+    op_src: np.ndarray
+    op_dst: np.ndarray
+    op_p: np.ndarray
+    op_wired: np.ndarray
+    op_wireless: np.ndarray
+    op_local: np.ndarray
+    op_in: np.ndarray
+
+
+def pad_op_tables(
+    inst: ProblemInstance,
+    *,
+    n_ops: int,
+    indeg_pad: int,
+    edge_sentinel: int,
+    tables: OpTables | None = None,
+) -> PaddedOpTables:
+    """Pad ``build_op_tables(inst)`` into the flat device layout above.
+
+    ``n_ops`` and ``indeg_pad`` must be at least the instance's true op
+    count / max in-degree (callers pass the fleet-wide size bucket).
+    ``tables`` lets callers that already built the instance's op tables
+    (e.g. while sizing the fleet bucket) skip rebuilding them.
+    """
+    job = inst.job
+    if tables is None:
+        tables = build_op_tables(inst)
+    if n_ops < tables.n_ops or indeg_pad < tables.task_in_edges.shape[1]:
+        raise ValueError("padded dims smaller than the instance's op tables")
+
+    kind = np.full(n_ops, OP_PAD, dtype=np.int32)
+    op_task = np.zeros(n_ops, dtype=np.int32)
+    op_edge = np.zeros(n_ops, dtype=np.int32)
+    op_src = np.zeros(n_ops, dtype=np.int32)
+    op_dst = np.zeros(n_ops, dtype=np.int32)
+    op_p = np.zeros(n_ops, dtype=np.float32)
+    op_wired = np.zeros(n_ops, dtype=np.float32)
+    op_wireless = np.zeros(n_ops, dtype=np.float32)
+    op_local = np.zeros(n_ops, dtype=np.float32)
+    op_in = np.full((n_ops, indeg_pad), edge_sentinel, dtype=np.int32)
+
+    q, qw, r = inst.q_wired, inst.q_wireless, inst.r_local
+    for row in range(tables.n_ops):
+        k, i = int(tables.kind[row]), int(tables.idx[row])
+        kind[row] = k
+        if k == OP_TASK:
+            op_task[row] = i
+            op_p[row] = job.p[i]
+            ins = tables.task_in_edges[i]
+            ins = ins[ins >= 0]
+            op_in[row, : ins.size] = ins
+        else:
+            op_edge[row] = i
+            op_src[row] = tables.edge_src[i]
+            op_dst[row] = tables.edge_dst[i]
+            op_wired[row] = q[i]
+            op_wireless[row] = qw[i]
+            op_local[row] = r[i]
+
+    return PaddedOpTables(
+        kind=kind,
+        op_task=op_task,
+        op_edge=op_edge,
+        op_src=op_src,
+        op_dst=op_dst,
+        op_p=op_p,
+        op_wired=op_wired,
+        op_wireless=op_wireless,
+        op_local=op_local,
+        op_in=op_in,
     )
 
 

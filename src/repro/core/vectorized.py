@@ -4,29 +4,39 @@ The paper's solver is host-side B&B. On TPU-class hardware the natural
 adaptation of its *search* is massive data parallelism: evaluate tens of
 thousands of candidate rack assignments simultaneously as one batched tensor
 program. This module implements that search as a two-stage, device-sharded
-batch engine:
+batch engine whose padding and masking are **instance-aware end-to-end**: a
+fleet of heterogeneous :class:`ProblemInstance`\\ s is packed into one padded
+mega-batch (shared size bucket, per-row instance ids, per-instance channel
+masks) and solved by a single pair of compiled programs.
 
-  Stage 1 (bound): the critical-path lower bound of every candidate in the
-  batch is computed with :func:`repro.kernels.ops.batched_critical_path`
-  (the Pallas ``cpm`` kernel — iterated max-plus relaxation on dense
-  adjacency blocks). Candidates whose bound already meets the running
-  incumbent are discarded without ever being scheduled.
+  Stage 1 (bound): every candidate passes through the paper's combined
+  §IV-A lower bound, computed batched on-device by the fused Pallas kernel
+  :func:`repro.kernels.ops.batched_combined_lb` — the critical-path bound
+  (iterated max-plus relaxation on dense adjacency blocks) maxed with the
+  contention terms (per-rack work, aggregate wired+wireless channel work;
+  see :mod:`repro.core.bounds` for the §IV-A term-to-array mapping).
+  Candidates whose bound already meets the running incumbent are discarded
+  without ever being scheduled; the contention terms are what let dense
+  instances (where the contention-free critical path prunes 0%) prune.
 
   Stage 2 (evaluate): survivors are scored by a greedy non-delay schedule
   executed in lock-step across the batch. The evaluator is a single
-  ``lax.scan`` over a *static op table* — padded int32/float32 tables
-  (kind / task / edge / endpoints / durations / in-edge lists, built by
-  :func:`repro.core.simulator.build_op_tables`) describing the interleaved
-  (edge*, task) sequence in topological order. Because the tables are scan
-  inputs rather than Python-unrolled constants, one compiled program serves
-  every instance that fits the same size bucket; new instances cost zero
-  recompilation. Batches are sharded across local devices with ``shard_map``
-  when more than one device is present, degrading gracefully to a plain
-  ``jit`` on a single-device (CPU) host.
+  ``lax.scan`` over *static op tables* in the shared layout of
+  :func:`repro.core.simulator.pad_op_tables` — per-instance tables are
+  stacked on a leading axis and gathered per batch row by instance id, so
+  candidates of **different** jobs ride in the same launch, and one
+  compiled program serves every fleet whose size bucket matches. Batches
+  are sharded across local devices with ``shard_map`` when more than one
+  device is present, degrading gracefully to a plain ``jit``.
 
-A seeded local-search refinement loop mutates the incumbent's assignment and
-feeds the mutants back through the same two stages, so the sampled regime
-(instances too big to enumerate) converges instead of being one-shot.
+Fleet API: :func:`schedule_fleet` runs N heterogeneous instances through
+the lockstep driver — per-instance incumbents, pruning and refinement
+evolve exactly as in the single-instance :func:`vectorized_search` (which
+is now the fleet-of-one special case), so each per-instance result is
+bit-for-bit identical to solving that instance alone, while the fleet pays
+one sharded launch (and at most one trace) per stage instead of one per
+instance. :class:`FleetResult` reports per-instance results plus fleet
+prune / launch / trace counters.
 
 This module is an *incumbent generator / pruner*: the winning assignment is
 re-executed exactly with the host simulator and verified by the OP checker.
@@ -46,9 +56,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bounds as bounds_mod
 from repro.core.instance import ProblemInstance
 from repro.core.schedule import Schedule
-from repro.core.simulator import OP_PAD, OP_TASK, build_op_tables, simulate
+from repro.core.simulator import OP_EDGE, OP_TASK, build_op_tables, pad_op_tables, simulate
 
 __all__ = [
     "enumerate_assignments",
@@ -56,7 +67,9 @@ __all__ = [
     "make_batched_evaluator",
     "batched_lower_bound",
     "vectorized_search",
+    "schedule_fleet",
     "VectorizedResult",
+    "FleetResult",
 ]
 
 
@@ -98,35 +111,86 @@ def sample_assignments(
 
 def _bucket(x: int, lo: int = 8) -> int:
     """Smallest power of two >= max(x, lo): the size-bucket rounding used for
-    every padded dimension so compiled programs are shared across instances."""
+    every padded dimension so compiled programs are shared across fleets."""
     b = lo
     while b < x:
         b *= 2
     return b
 
 
+@dataclasses.dataclass(frozen=True)
+class _FleetDims:
+    """Shared size bucket of a (possibly heterogeneous) instance fleet.
+
+    Every padded dimension is the bucket of the fleet-wide maximum, so all
+    instances share one op-table layout and one compiled program per stage.
+    ``n_iters`` is the true relaxation depth bound (max task count - 1):
+    extra rounds past an instance's own depth are exact no-ops, which keeps
+    per-instance bounds bit-identical under any fleet padding.
+    """
+
+    n_ops: int
+    n_pad: int
+    m_pad: int
+    M_pad: int
+    indeg_pad: int
+    n_chan: int
+    n_iters: int
+
+
+def _fleet_dims(instances, use_wireless: bool, op_tables=None) -> _FleetDims:
+    """Size bucket of a fleet. ``op_tables`` (one prebuilt ``OpTables`` per
+    instance) sizes the evaluator dims; LB-only callers omit it and must
+    not read ``n_ops`` / ``indeg_pad`` (they stay at the bucket floor)."""
+    n_ops = n = m = M = indeg = wireless = 1
+    for i, inst in enumerate(instances):
+        if op_tables is not None:
+            n_ops = max(n_ops, op_tables[i].n_ops)
+            indeg = max(indeg, op_tables[i].task_in_edges.shape[1])
+        n = max(n, inst.job.n_tasks)
+        m = max(m, inst.job.n_edges)
+        M = max(M, inst.n_racks)
+        if use_wireless:
+            wireless = max(wireless, inst.n_wireless)
+    return _FleetDims(
+        n_ops=_bucket(n_ops),
+        n_pad=_bucket(n),
+        m_pad=_bucket(m),
+        M_pad=_bucket(M, lo=2),
+        indeg_pad=_bucket(indeg, lo=4),
+        n_chan=1 + (wireless if use_wireless else 0),
+        n_iters=max(0, n - 1),
+    )
+
+
 # ---------------------------------------------------------------------------
-# Stage-2 evaluator: op-table lax.scan program
+# Stage-2 evaluator: instance-aware op-table lax.scan program
 # ---------------------------------------------------------------------------
 
 # Incremented each time the scan evaluator is traced; lets tests assert that
-# instances sharing a size bucket reuse the compiled program.
+# fleets sharing a size bucket reuse the compiled program.
 TRACE_COUNT = 0
+
+# Same, for the stage-1 combined-bound program.
+LB_TRACE_COUNT = 0
 
 
 def _scan_evaluate(
-    rack,       # int32[B, n_pad]
-    kind,       # int32[n_ops]   OP_TASK / OP_EDGE / OP_PAD
-    op_task,    # int32[n_ops]   task id for OP_TASK rows (0 otherwise)
-    op_edge,    # int32[n_ops]   edge id for OP_EDGE rows (0 otherwise)
-    op_src,     # int32[n_ops]   edge source task (0 otherwise)
-    op_dst,     # int32[n_ops]   edge dest task (0 otherwise)
-    op_p,       # f32[n_ops]     task duration
-    op_wired,   # f32[n_ops]     wired transfer duration
-    op_wireless,  # f32[n_ops]   wireless transfer duration
-    op_local,   # f32[n_ops]     local transfer delay
-    op_in,      # int32[n_ops, indeg_pad] in-edge ids gating a task row;
-                #                the sentinel id m_pad always reads 0.0
+    rack,       # int32[B, n_pad]  candidate assignments (one job's tasks per row)
+    inst_id,    # int32[B]         which fleet instance each row belongs to
+    kind,       # int32[I, n_ops]  OP_TASK / OP_EDGE / OP_PAD
+    op_task,    # int32[I, n_ops]  task id for OP_TASK rows (0 otherwise)
+    op_edge,    # int32[I, n_ops]  edge id for OP_EDGE rows (0 otherwise)
+    op_src,     # int32[I, n_ops]  edge source task (0 otherwise)
+    op_dst,     # int32[I, n_ops]  edge dest task (0 otherwise)
+    op_p,       # f32[I, n_ops]    task duration
+    op_wired,   # f32[I, n_ops]    wired transfer duration
+    op_wireless,  # f32[I, n_ops]  wireless transfer duration
+    op_local,   # f32[I, n_ops]    local transfer delay
+    op_in,      # int32[I, n_ops, indeg_pad] in-edge ids gating a task row;
+                #                  the sentinel id m_pad always reads 0.0
+    chan_free0,  # f32[I, n_chan]  initial channel availability: 0 = usable,
+                #                  +inf = masked (instance has fewer channels)
     *,
     m_pad: int,
     M_pad: int,
@@ -134,54 +198,75 @@ def _scan_evaluate(
 ):
     global TRACE_COUNT
     TRACE_COUNT += 1
-    B = rack.shape[0]
+    B, n_pad = rack.shape
+
+    def take(t):
+        return jnp.take(t, inst_id, axis=0)
+
+    # Per-row tables, scan axis leading. Rows of different instances walk
+    # different op sequences in lock-step; OP_PAD rows are no-ops.
+    xs = (
+        take(kind).T, take(op_task).T, take(op_edge).T, take(op_src).T,
+        take(op_dst).T, take(op_p).T, take(op_wired).T, take(op_wireless).T,
+        take(op_local).T, jnp.swapaxes(take(op_in), 0, 1),
+    )
     carry0 = (
         jnp.zeros((B, M_pad), jnp.float32),      # rack_free
-        jnp.zeros((B, n_chan), jnp.float32),     # chan_free
-        jnp.zeros((B, rack.shape[1]), jnp.float32),  # task_fin
+        take(chan_free0),                        # chan_free (+inf = masked)
+        jnp.zeros((B, n_pad), jnp.float32),      # task_fin
         jnp.zeros((B, m_pad + 1), jnp.float32),  # edge_fin (+1 sentinel col)
     )
-    xs = (kind, op_task, op_edge, op_src, op_dst, op_p, op_wired, op_wireless,
-          op_local, op_in)
+
+    def pick(tab, idx):  # tab[B, W], idx[B] -> [B]
+        return jnp.take_along_axis(tab, idx[:, None], axis=1)[:, 0]
 
     def step(carry, x):
+        rack_free, chan_free, task_fin, edge_fin = carry
         kind_t, t_v, e_id, u, v, p_v, q_w, q_wl, r_l, in_row = x
+        is_task = kind_t == OP_TASK
+        is_edge = kind_t == OP_EDGE
 
-        def do_task(carry):
-            rack_free, chan_free, task_fin, edge_fin = carry
-            ready = jnp.max(jnp.take(edge_fin, in_row, axis=1), axis=1)
-            rv = jnp.take(rack, t_v, axis=1)
-            free_v = jnp.take_along_axis(rack_free, rv[:, None], axis=1)[:, 0]
-            fin = jnp.maximum(ready, free_v) + p_v
-            rack_free = jnp.where(
-                jax.nn.one_hot(rv, M_pad, dtype=bool), fin[:, None], rack_free
-            )
-            task_fin = task_fin.at[:, t_v].set(fin)
-            return rack_free, chan_free, task_fin, edge_fin
+        # Task branch (reads the pre-step carry): start when all gating
+        # in-edges have finished and the task's rack is free.
+        ready_t = jnp.max(jnp.take_along_axis(edge_fin, in_row, axis=1), axis=1)
+        rv = pick(rack, t_v)
+        fin_t = jnp.maximum(ready_t, pick(rack_free, rv)) + p_v
 
-        def do_edge(carry):
-            rack_free, chan_free, task_fin, edge_fin = carry
-            ready = jnp.take(task_fin, u, axis=1)
-            same = jnp.take(rack, u, axis=1) == jnp.take(rack, v, axis=1)
-            # Local path: no resource, duration r.
-            fin_local = ready + r_l
-            # Network path: earliest-finish channel (0 wired, 1.. wireless).
-            durs = jnp.concatenate(
-                [q_w[None], jnp.broadcast_to(q_wl, (n_chan - 1,))]
-            )
-            s = jnp.maximum(ready[:, None], chan_free)
-            f = s + durs[None, :]
-            best = jnp.argmin(f, axis=1)
-            fin_net = jnp.take_along_axis(f, best[:, None], axis=1)[:, 0]
-            new_free = jnp.where(
-                jax.nn.one_hot(best, n_chan, dtype=bool), fin_net[:, None], chan_free
-            )
-            chan_free = jnp.where(same[:, None], chan_free, new_free)
-            fin = jnp.where(same, fin_local, fin_net)
-            edge_fin = edge_fin.at[:, e_id].set(fin)
-            return rack_free, chan_free, task_fin, edge_fin
+        # Edge branch (reads the pre-step carry; a row is task OR edge at
+        # any step, so both branches can share it).
+        ready_e = pick(task_fin, u)
+        same = pick(rack, u) == pick(rack, v)
+        fin_local = ready_e + r_l
+        # Network path: earliest-finish channel (0 wired, 1.. wireless);
+        # masked channels sit at +inf and are never selected.
+        durs = jnp.concatenate(
+            [q_w[:, None], jnp.broadcast_to(q_wl[:, None], (B, n_chan - 1))],
+            axis=1,
+        )
+        s = jnp.maximum(ready_e[:, None], chan_free)
+        f = s + durs
+        best = jnp.argmin(f, axis=1)
+        fin_net = jnp.take_along_axis(f, best[:, None], axis=1)[:, 0]
+        new_free = jnp.where(
+            jax.nn.one_hot(best, n_chan, dtype=bool), fin_net[:, None], chan_free
+        )
+        fin_e = jnp.where(same, fin_local, fin_net)
 
-        return jax.lax.switch(kind_t, (do_task, do_edge, lambda c: c), carry), None
+        # Merge by per-row op kind (OP_PAD rows change nothing).
+        rack_free = jnp.where(
+            is_task[:, None] & jax.nn.one_hot(rv, M_pad, dtype=bool),
+            fin_t[:, None], rack_free,
+        )
+        task_fin = jnp.where(
+            is_task[:, None] & jax.nn.one_hot(t_v, n_pad, dtype=bool),
+            fin_t[:, None], task_fin,
+        )
+        chan_free = jnp.where((is_edge & ~same)[:, None], new_free, chan_free)
+        edge_fin = jnp.where(
+            is_edge[:, None] & jax.nn.one_hot(e_id, m_pad + 1, dtype=bool),
+            fin_e[:, None], edge_fin,
+        )
+        return (rack_free, chan_free, task_fin, edge_fin), None
 
     (_, _, task_fin, _), _ = jax.lax.scan(step, carry0, xs)
     return jnp.max(task_fin, axis=1)
@@ -192,7 +277,7 @@ def _compiled_evaluator(n_dev: int, m_pad: int, M_pad: int, n_chan: int):
     """Jitted (and, with >1 local device, shard_map-sharded) scan evaluator.
 
     The returned callable is cached per (device count, static dims); jit then
-    caches per concrete table/batch shape — so any two instances in the same
+    caches per concrete table/batch shape — so any two fleets in the same
     size bucket share one compiled program.
     """
     core = functools.partial(
@@ -204,149 +289,202 @@ def _compiled_evaluator(n_dev: int, m_pad: int, M_pad: int, n_chan: int):
     from jax.experimental.shard_map import shard_map
     from jax.sharding import Mesh, PartitionSpec as P
 
-    # Local devices only: batch padding in make_batched_evaluator is sized by
+    # Local devices only: batch padding by the callers is sized to divide by
     # local_device_count, and each process shards its own host-local batch.
+    # Only the candidate rows are sharded; tables are replicated.
     mesh = Mesh(np.asarray(jax.local_devices()), ("b",))
-    rep1, rep2 = P(None), P(None, None)
+    r2, r3 = P(None, None), P(None, None, None)
     sharded = shard_map(
         core,
         mesh=mesh,
-        in_specs=(P("b", None), rep1, rep1, rep1, rep1, rep1, rep1, rep1,
-                  rep1, rep1, rep2),
+        in_specs=(P("b", None), P("b"), r2, r2, r2, r2, r2, r2, r2, r2, r2,
+                  r3, r2),
         out_specs=P("b"),
         check_rep=False,
     )
     return jax.jit(sharded)
 
 
-@dataclasses.dataclass(frozen=True)
-class _EvalTables:
-    """Device-ready padded op tables plus the static dims of their bucket."""
-
-    kind: jax.Array
-    op_task: jax.Array
-    op_edge: jax.Array
-    op_src: jax.Array
-    op_dst: jax.Array
-    op_p: jax.Array
-    op_wired: jax.Array
-    op_wireless: jax.Array
-    op_local: jax.Array
-    op_in: jax.Array
-    n_pad: int
-    m_pad: int
-    M_pad: int
-    n_chan: int
-
-
-def _build_eval_tables(inst: ProblemInstance, use_wireless: bool) -> _EvalTables:
-    job = inst.job
-    n, m, M = job.n_tasks, job.n_edges, inst.n_racks
-    n_chan = 1 + (inst.n_wireless if use_wireless else 0)
-    tables = build_op_tables(inst)
-
-    n_ops = _bucket(tables.n_ops)
-    n_pad = _bucket(n)
-    m_pad = _bucket(max(m, 1))
-    M_pad = _bucket(M, lo=2)
-    indeg_pad = _bucket(tables.task_in_edges.shape[1], lo=4)
-
-    kind = np.full(n_ops, OP_PAD, dtype=np.int32)
-    op_task = np.zeros(n_ops, dtype=np.int32)
-    op_edge = np.zeros(n_ops, dtype=np.int32)
-    op_src = np.zeros(n_ops, dtype=np.int32)
-    op_dst = np.zeros(n_ops, dtype=np.int32)
-    op_p = np.zeros(n_ops, dtype=np.float32)
-    op_wired = np.zeros(n_ops, dtype=np.float32)
-    op_wireless = np.zeros(n_ops, dtype=np.float32)
-    op_local = np.zeros(n_ops, dtype=np.float32)
-    # Sentinel edge id m_pad indexes the always-zero extra column of edge_fin.
-    op_in = np.full((n_ops, indeg_pad), m_pad, dtype=np.int32)
-
-    q, qw, r = inst.q_wired, inst.q_wireless, inst.r_local
-    for row in range(tables.n_ops):
-        k, i = int(tables.kind[row]), int(tables.idx[row])
-        kind[row] = k
-        if k == OP_TASK:
-            op_task[row] = i
-            op_p[row] = job.p[i]
-            ins = tables.task_in_edges[i]
-            ins = ins[ins >= 0]
-            op_in[row, : ins.size] = ins
-        else:
-            op_edge[row] = i
-            op_src[row] = tables.edge_src[i]
-            op_dst[row] = tables.edge_dst[i]
-            op_wired[row] = q[i]
-            op_wireless[row] = qw[i]
-            op_local[row] = r[i]
-
-    return _EvalTables(
-        kind=jnp.asarray(kind),
-        op_task=jnp.asarray(op_task),
-        op_edge=jnp.asarray(op_edge),
-        op_src=jnp.asarray(op_src),
-        op_dst=jnp.asarray(op_dst),
-        op_p=jnp.asarray(op_p),
-        op_wired=jnp.asarray(op_wired),
-        op_wireless=jnp.asarray(op_wireless),
-        op_local=jnp.asarray(op_local),
-        op_in=jnp.asarray(op_in),
-        n_pad=n_pad,
-        m_pad=m_pad,
-        M_pad=M_pad,
-        n_chan=n_chan,
+def _build_eval_stack(instances, dims: _FleetDims, use_wireless: bool, op_tables=None):
+    """Stacked device op tables [I, ...] in ``_scan_evaluate`` order."""
+    I = len(instances)
+    fields = {
+        "kind": np.zeros((I, dims.n_ops), np.int32),
+        "op_task": np.zeros((I, dims.n_ops), np.int32),
+        "op_edge": np.zeros((I, dims.n_ops), np.int32),
+        "op_src": np.zeros((I, dims.n_ops), np.int32),
+        "op_dst": np.zeros((I, dims.n_ops), np.int32),
+        "op_p": np.zeros((I, dims.n_ops), np.float32),
+        "op_wired": np.zeros((I, dims.n_ops), np.float32),
+        "op_wireless": np.zeros((I, dims.n_ops), np.float32),
+        "op_local": np.zeros((I, dims.n_ops), np.float32),
+        "op_in": np.zeros((I, dims.n_ops, dims.indeg_pad), np.int32),
+    }
+    chan_free0 = np.full((I, dims.n_chan), np.inf, np.float32)
+    for i, inst in enumerate(instances):
+        t = pad_op_tables(
+            inst,
+            n_ops=dims.n_ops,
+            indeg_pad=dims.indeg_pad,
+            edge_sentinel=dims.m_pad,
+            tables=None if op_tables is None else op_tables[i],
+        )
+        for name in fields:
+            fields[name][i] = getattr(t, name)
+        n_ch = 1 + (inst.n_wireless if use_wireless else 0)
+        chan_free0[i, :n_ch] = 0.0
+    return tuple(jnp.asarray(fields[name]) for name in fields) + (
+        jnp.asarray(chan_free0),
     )
 
 
 def make_batched_evaluator(inst: ProblemInstance, use_wireless: bool = True):
     """Build a fn: rack[B, n] int -> makespan[B] float32 (greedy non-delay).
 
-    The returned callable pads its batch to the evaluator's size bucket
-    (batch to a power of two times the local device count, tasks to the
-    bucket task count) and dispatches the shared compiled scan program —
+    The fleet-of-one special case of the mega-batch evaluator: pads its
+    batch to the instance's size bucket (batch to a power of two times the
+    local device count) and dispatches the shared compiled scan program —
     identical instances never retrace, and instances of similar size share
     one compiled program per bucket.
     """
-    t = _build_eval_tables(inst, use_wireless)
+    ops = [build_op_tables(inst)]
+    dims = _fleet_dims([inst], use_wireless, ops)
+    tables = _build_eval_stack([inst], dims, use_wireless, ops)
     n = inst.job.n_tasks
     n_dev = jax.local_device_count()
-    fn = _compiled_evaluator(n_dev, t.m_pad, t.M_pad, t.n_chan)
-    table_args = (
-        t.kind, t.op_task, t.op_edge, t.op_src, t.op_dst, t.op_p,
-        t.op_wired, t.op_wireless, t.op_local, t.op_in,
-    )
+    fn = _compiled_evaluator(n_dev, dims.m_pad, dims.M_pad, dims.n_chan)
 
     def evaluate(rack) -> jax.Array:
         rack = np.asarray(rack, dtype=np.int32)
         B = rack.shape[0]
         B_pad = _bucket(B) * (n_dev if _bucket(B) % n_dev else 1)
-        padded = np.zeros((B_pad, t.n_pad), dtype=np.int32)
+        padded = np.zeros((B_pad, dims.n_pad), dtype=np.int32)
         padded[:B, :n] = rack
-        return fn(jnp.asarray(padded), *table_args)[:B]
+        inst_id = np.zeros(B_pad, dtype=np.int32)
+        return fn(jnp.asarray(padded), jnp.asarray(inst_id), *tables)[:B]
 
-    evaluate.tables = t
+    evaluate.dims = dims
     return evaluate
 
 
 # ---------------------------------------------------------------------------
-# Stage-1 bound: Pallas cpm kernel over dense max-plus adjacency
+# Stage-1 bound: fused Pallas combined §IV-A bound over the mega-batch
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("n_pad",))
-def _dense_maxplus_w(racks, src, dst, p_src, r, netc, *, n_pad: int):
-    """w[B, n_pad, n_pad] max-plus adjacency per candidate assignment.
+def _build_lb_arrays(instances, dims: _FleetDims):
+    """Stacked stage-1 arrays [I, ...] for ``_fleet_lb_device``.
 
-    Edge positions are identical across the batch, so this is one batched
-    static-index scatter (edges are unique by construction; padded edges all
-    write -inf at (0, 0), which no real edge can occupy — self-loops are
-    rejected by DagJob). Padded nodes have no incident edges, so their dist
-    stays 0 and never dominates the final max.
+    Padded edges carry -inf costs (their scatter into the max-plus adjacency
+    is a no-op) and zero ``net_work`` (they add nothing to the aggregate
+    channel-work term); padded tasks carry zero duration.
     """
-    cost = jnp.where(racks[:, src] == racks[:, dst], r, netc) + p_src
-    w = jnp.full((racks.shape[0], n_pad, n_pad), -jnp.inf, dtype=jnp.float32)
-    # No unique_indices: every padded edge writes -inf at (0, 0).
-    return w.at[:, src, dst].set(cost, mode="drop")
+    I = len(instances)
+    src = np.zeros((I, dims.m_pad), np.int32)
+    dst = np.zeros((I, dims.m_pad), np.int32)
+    p_src = np.zeros((I, dims.m_pad), np.float32)
+    c_local = np.full((I, dims.m_pad), -np.inf, np.float32)
+    c_net = np.full((I, dims.m_pad), -np.inf, np.float32)
+    net_work = np.zeros((I, dims.m_pad), np.float32)
+    p_task = np.zeros((I, dims.n_pad), np.float32)
+    chan_div = np.ones(I, np.float32)
+    for i, inst in enumerate(instances):
+        job = inst.job
+        m = job.n_edges
+        p_task[i, : job.n_tasks] = job.p
+        chan_div[i] = 1 + inst.n_wireless
+        if m:
+            src[i, :m] = job.edges[:, 0]
+            dst[i, :m] = job.edges[:, 1]
+            p_src[i, :m] = job.p[job.edges[:, 0]]
+            c_local[i, :m] = inst.r_local
+            net = bounds_mod.min_network_durations(inst)
+            c_net[i, :m] = net
+            net_work[i, :m] = net
+    return tuple(
+        jnp.asarray(a)
+        for a in (src, dst, p_src, c_local, c_net, net_work, p_task, chan_div)
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("M_pad", "n_iters", "block_b", "contention")
+)
+def _fleet_lb_device(
+    racks,      # int32[B, n_pad]
+    inst_id,    # int32[B]
+    src,        # int32[I, m_pad]
+    dst,        # int32[I, m_pad]
+    p_src,      # f32[I, m_pad]  source-task duration per edge (0 on padding)
+    c_local,    # f32[I, m_pad]  local delay per edge (-inf on padding)
+    c_net,      # f32[I, m_pad]  optimistic network duration (-inf on padding)
+    net_work,   # f32[I, m_pad]  min network duration (0 on padding)
+    p_task,     # f32[I, n_pad]  task durations (0 on padding)
+    chan_div,   # f32[I]         1 + |K| network channels
+    *,
+    M_pad: int,
+    n_iters: int,
+    block_b: int,
+    contention: bool,
+):
+    """Batched combined §IV-A bound: one device program for the whole fleet.
+
+    Builds the per-candidate max-plus adjacency (edge cost = p_u + r or
+    p_u + min(q, q̌) depending on co-location), accumulates the contention
+    terms, and hands both to the fused Pallas kernel
+    :func:`repro.kernels.ops.batched_combined_lb`.
+    """
+    global LB_TRACE_COUNT
+    LB_TRACE_COUNT += 1
+    B, n_pad = racks.shape
+    m_pad = src.shape[1]
+
+    def take(t):
+        return jnp.take(t, inst_id, axis=0)
+
+    src_b, dst_b = take(src), take(dst)
+    same = jnp.take_along_axis(racks, src_b, axis=1) == jnp.take_along_axis(
+        racks, dst_b, axis=1
+    )
+    cost = jnp.where(same, take(c_local), take(c_net)) + take(p_src)
+    # Batched static-index scatter: padded edges all write -inf at (0, 0),
+    # which no real edge can occupy (self-loops are rejected by DagJob).
+    w = jnp.full((B, n_pad, n_pad), -jnp.inf, jnp.float32)
+    w = w.at[jnp.arange(B)[:, None], src_b, dst_b].set(cost)
+    p_b = take(p_task)
+
+    if contention:
+        # §IV-A contention terms, accumulated in a fixed sequential order so
+        # an instance's bounds are bit-identical under any fleet padding
+        # (padded tasks/edges contribute exact zeros).
+        def load_body(v, load):
+            rv = jax.lax.dynamic_index_in_dim(racks, v, axis=1, keepdims=False)
+            pv = jax.lax.dynamic_index_in_dim(p_b, v, axis=1, keepdims=False)
+            return load + jnp.where(
+                jax.nn.one_hot(rv, M_pad, dtype=bool), pv[:, None], 0.0
+            )
+
+        load = jax.lax.fori_loop(
+            0, n_pad, load_body, jnp.zeros((B, M_pad), jnp.float32)
+        )
+        lb_load = jnp.max(load, axis=1)
+
+        nw = take(net_work)
+
+        def work_body(e, acc):
+            ne = jax.lax.dynamic_index_in_dim(nw, e, axis=1, keepdims=False)
+            se = jax.lax.dynamic_index_in_dim(same, e, axis=1, keepdims=False)
+            return acc + jnp.where(se, 0.0, ne)
+
+        work = jax.lax.fori_loop(0, m_pad, work_body, jnp.zeros((B,), jnp.float32))
+        extra = jnp.maximum(lb_load, work / take(chan_div))
+    else:
+        extra = jnp.full((B,), -jnp.inf, jnp.float32)
+
+    from repro.kernels import ops as kops
+
+    return kops.batched_combined_lb(
+        w, p_b, extra, block_b=min(block_b, B), n_iters=n_iters
+    )
 
 
 def batched_lower_bound(
@@ -354,26 +492,54 @@ def batched_lower_bound(
     racks: np.ndarray,
     use_kernel: bool = False,
     block_b: int = 1024,
+    contention: bool = True,
 ) -> np.ndarray:
-    """Critical-path LB per assignment via iterated max-plus relaxation.
+    """Combined §IV-A LB per assignment (critical path + contention terms).
 
-    dist[v] >= dist[u] + p_u + cost(u, v) where cost is r (same rack) or the
-    optimistic network duration (different racks). Converges in <= depth
-    iterations.
+    Critical path: dist[v] >= dist[u] + p_u + cost(u, v) where cost is r
+    (same rack) or the optimistic network duration (different racks);
+    converges in <= depth iterations. With ``contention=True`` (default)
+    the result is maxed with the per-rack work and aggregate channel-work
+    bounds of :mod:`repro.core.bounds`, which is what makes dense instances
+    prunable at all.
 
-    With ``use_kernel=True`` the relaxation runs through the Pallas ``cpm``
-    kernel (`repro.kernels.ops.batched_critical_path`) on dense size-bucketed
-    adjacency blocks — the production stage-1 path of `vectorized_search`.
-    The edge-list jit path is the portable reference oracle.
+    With ``use_kernel=True`` the whole bound runs through the fused Pallas
+    path (`_fleet_lb_device` -> `repro.kernels.ops.batched_combined_lb`) on
+    dense size-bucketed adjacency blocks — the production stage-1 path of
+    `vectorized_search` / `schedule_fleet`. The edge-list jit path is the
+    portable reference oracle.
     """
     job = inst.job
     n, m = job.n_tasks, job.n_edges
     racks = np.asarray(racks, dtype=np.int32)
+    B = racks.shape[0]
+
+    if use_kernel:
+        # LB-only dims: no op tables needed (only the n/m/M buckets and the
+        # relaxation depth feed the bound program).
+        dims = _fleet_dims([inst], use_wireless=True)
+        lb_args = _build_lb_arrays([inst], dims)
+        B_pad = _bucket(B)
+        racks_pad = np.zeros((B_pad, dims.n_pad), dtype=np.int32)
+        racks_pad[:B, :n] = racks
+        out = _fleet_lb_device(
+            jnp.asarray(racks_pad),
+            jnp.zeros(B_pad, jnp.int32),
+            *lb_args,
+            M_pad=dims.M_pad,
+            n_iters=dims.n_iters,
+            block_b=min(block_b, B_pad),
+            contention=contention,
+        )
+        return np.asarray(out)[:B]
+
     if m == 0:
-        return np.broadcast_to(
-            np.float32(np.max(job.p)), (racks.shape[0],)
-        ).astype(np.float32)
-    net = np.minimum(inst.q_wired, inst.q_wireless) if inst.n_wireless else inst.q_wired
+        base = np.broadcast_to(np.float32(np.max(job.p)), (B,)).astype(np.float32)
+        if contention:
+            extra = bounds_mod.contention_lower_bounds(inst, racks)
+            base = np.maximum(base, extra.astype(np.float32))
+        return base
+    net = bounds_mod.min_network_durations(inst)
 
     p = jnp.asarray(job.p, dtype=jnp.float32)
     r = jnp.asarray(inst.r_local, dtype=jnp.float32)
@@ -381,46 +547,10 @@ def batched_lower_bound(
     src = jnp.asarray(job.edges[:, 0].astype(np.int32))
     dst = jnp.asarray(job.edges[:, 1].astype(np.int32))
 
-    if use_kernel:
-        from repro.kernels import ops as kops
-
-        B = racks.shape[0]
-        B_pad = _bucket(B)
-        n_pad = _bucket(n)
-        m_pad = _bucket(m, lo=1)
-        # Bucket every dim so the build + kernel compile once per bucket:
-        # padded batch rows are zero-filled (sliced off before return),
-        # padded edges scatter -inf (a no-op).
-        racks_pad = np.zeros((B_pad, n), dtype=np.int32)
-        racks_pad[:B] = racks
-        src_pad = np.zeros(m_pad, dtype=np.int32)
-        dst_pad = np.zeros(m_pad, dtype=np.int32)
-        src_pad[:m] = job.edges[:, 0]
-        dst_pad[:m] = job.edges[:, 1]
-        cost_pad = np.full((3, m_pad), -np.inf, dtype=np.float32)
-        cost_pad[0, :m] = job.p[job.edges[:, 0]]
-        cost_pad[1, :m] = inst.r_local
-        cost_pad[2, :m] = net
-        w = _dense_maxplus_w(
-            jnp.asarray(racks_pad),
-            jnp.asarray(src_pad),
-            jnp.asarray(dst_pad),
-            jnp.asarray(cost_pad[0]),
-            jnp.asarray(cost_pad[1]),
-            jnp.asarray(cost_pad[2]),
-            n_pad=n_pad,
-        )
-        dist = kops.batched_critical_path(
-            w, block_b=min(block_b, B_pad), n_iters=n - 1
-        )
-        p_full = jnp.zeros(n_pad, jnp.float32).at[:n].set(p)
-        return np.asarray(jnp.max(dist + p_full[None, :], axis=1))[:B]
-
     @jax.jit
     def lb(rk: jax.Array) -> jax.Array:
         cost = jnp.where(rk[:, src] == rk[:, dst], r, netc)
-        B = rk.shape[0]
-        dist = jnp.zeros((B, n), dtype=jnp.float32)
+        dist = jnp.zeros((rk.shape[0], n), dtype=jnp.float32)
 
         def body(_, dist):
             cand = dist[:, src] + p[src] + cost
@@ -429,11 +559,15 @@ def batched_lower_bound(
         dist = jax.lax.fori_loop(0, n - 1, body, dist)
         return jnp.max(dist + p[None, :], axis=1)
 
-    return np.asarray(lb(jnp.asarray(racks)))
+    out = np.asarray(lb(jnp.asarray(racks)))
+    if contention:
+        extra = bounds_mod.contention_lower_bounds(inst, racks)
+        out = np.maximum(out, extra.astype(np.float32))
+    return out
 
 
 # ---------------------------------------------------------------------------
-# Search driver: LB-pruned batch sweep + local-search refinement
+# Search driver: lockstep fleet state machines + mega-batch launches
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -445,6 +579,28 @@ class VectorizedResult:
     n_candidates: int = 0
     n_pruned: int = 0
     refine_rounds: int = 0
+
+
+@dataclasses.dataclass
+class FleetResult:
+    """Outcome of one fleet mega-batch search.
+
+    ``results[i]`` is bit-for-bit what ``vectorized_search(instances[i])``
+    with the same parameters would return. Launch counters tell how many
+    device dispatches the whole fleet cost; trace counters how many fresh
+    program traces (0 when a same-bucket fleet already warmed the caches,
+    at most one per stage otherwise).
+    """
+
+    results: list[VectorizedResult]
+    makespans: np.ndarray
+    n_candidates: int
+    n_pruned: int
+    n_evaluated: int
+    n_stage1_launches: int
+    n_stage2_launches: int
+    n_stage1_traces: int
+    n_stage2_traces: int
 
 
 def _mutate_pool(
@@ -477,6 +633,307 @@ def _mutate_pool(
     return pool
 
 
+class _InstanceState:
+    """Per-instance search state machine.
+
+    Mirrors the single-instance candidate flow exactly — chunking, buffered
+    stage-1 pruning against the running incumbent, fixed-size stage-2
+    flushes, strict-improvement incumbent updates — while the fleet driver
+    advances all states in lockstep and batches their device work into
+    shared launches. Because each state's decisions depend only on its own
+    rows (and per-row device results are padding-invariant), fleet results
+    equal single-instance results bit for bit.
+    """
+
+    def __init__(
+        self,
+        idx: int,
+        inst: ProblemInstance,
+        *,
+        seed: int,
+        max_enumerate: int,
+        n_samples: int,
+        batch_size: int,
+    ):
+        self.idx = idx
+        self.inst = inst
+        self.n = inst.job.n_tasks
+        self.batch_size = batch_size
+        M = inst.n_racks
+        # Bell-number guard: enumerate if the canonical count fits the budget.
+        cands = enumerate_assignments(self.n, M, limit=max_enumerate + 1)
+        self.sampled = cands.shape[0] > max_enumerate
+        if self.sampled:
+            rng = np.random.default_rng(seed)
+            cands = np.concatenate(
+                [
+                    enumerate_assignments(self.n, min(2, M), limit=n_samples),
+                    sample_assignments(rng, self.n, M, n_samples),
+                ],
+                axis=0,
+            )
+        self.cands = cands
+        self.pos = 0
+        self.buffer: list[np.ndarray] = []
+        self.buffered = 0
+        self.best_val = np.inf
+        self.best_rack: np.ndarray | None = None
+        self.n_eval = 0
+        self.n_pruned = 0
+        self.n_cands = 0
+        self.rng_refine = np.random.default_rng(seed + 1)
+        self.refine_rounds_run = 0
+        self.prev_best = np.inf
+
+    def next_chunk(self) -> np.ndarray | None:
+        if self.pos >= self.cands.shape[0]:
+            return None
+        chunk = self.cands[self.pos : self.pos + self.batch_size]
+        self.pos += self.batch_size
+        return chunk
+
+    def consider(self, chunk: np.ndarray, lbs: np.ndarray | None):
+        """Prune a chunk against the incumbent, buffer survivors, emit any
+        full stage-2 blocks. Returns [(state, block, true_b)]."""
+        self.n_cands += chunk.shape[0]
+        if lbs is not None:
+            keep = lbs < self.best_val - 1e-6
+            self.n_pruned += int((~keep).sum())
+            chunk = chunk[keep]
+        if chunk.shape[0]:
+            self.buffer.append(chunk)
+            self.buffered += chunk.shape[0]
+        return self._emit_full()
+
+    def _emit_full(self):
+        if self.buffered < self.batch_size:
+            return []
+        pool = np.concatenate(self.buffer, axis=0) if len(self.buffer) > 1 else self.buffer[0]
+        bs = self.batch_size
+        n_full = (pool.shape[0] // bs) * bs
+        blocks = [(self, pool[i : i + bs], bs) for i in range(0, n_full, bs)]
+        tail = pool[n_full:]
+        self.buffer = [tail] if tail.shape[0] else []
+        self.buffered = tail.shape[0]
+        return blocks
+
+    def flush_partial(self):
+        """Emit everything still buffered (tail padded to the block size;
+        pad-row scores are discarded on apply)."""
+        blocks = self._emit_full()
+        if self.buffered:
+            tail = (
+                np.concatenate(self.buffer, axis=0)
+                if len(self.buffer) > 1
+                else self.buffer[0]
+            )
+            true_b = tail.shape[0]
+            block = np.concatenate(
+                [tail, np.tile(tail[:1], (self.batch_size - true_b, 1))], axis=0
+            )
+            blocks.append((self, block, true_b))
+            self.buffer = []
+            self.buffered = 0
+        return blocks
+
+    def apply_scores(self, block: np.ndarray, vals: np.ndarray) -> None:
+        """Strict-improvement incumbent update over one block's true rows."""
+        self.n_eval += vals.shape[0]
+        j = int(np.argmin(vals))
+        if vals[j] < self.best_val:
+            self.best_val = float(vals[j])
+            self.best_rack = block[j].astype(np.int64)
+
+
+def _run_fleet(
+    instances: list[ProblemInstance],
+    *,
+    max_enumerate: int,
+    n_samples: int,
+    seeds: list[int],
+    use_wireless: bool,
+    batch_size: int,
+    lb_prune: bool,
+    use_kernel: bool,
+    contention: bool,
+    refine_rounds: int,
+    refine_pool: int,
+):
+    """Lockstep fleet driver: one mega-batch launch geometry per stage.
+
+    Every stage-1 launch is ``[I * batch_size]`` rows and every stage-2
+    launch ``[I * batch_size]`` rounded up to the device count, so the whole
+    fleet run traces (at most) one program per stage no matter how pruning
+    fragments the candidate streams.
+    """
+    I = len(instances)
+    op_tables = [build_op_tables(inst) for inst in instances]
+    dims = _fleet_dims(instances, use_wireless, op_tables)
+    eval_tables = _build_eval_stack(instances, dims, use_wireless, op_tables)
+    lb_args = _build_lb_arrays(instances, dims) if use_kernel else None
+    n_dev = jax.local_device_count()
+    fn = _compiled_evaluator(n_dev, dims.m_pad, dims.M_pad, dims.n_chan)
+    t2_0, t1_0 = TRACE_COUNT, LB_TRACE_COUNT
+    launches = [0, 0]  # [stage1, stage2]
+
+    B1 = I * batch_size
+    B2 = I * batch_size
+    if B2 % n_dev:
+        B2 += n_dev - B2 % n_dev
+
+    states = [
+        _InstanceState(
+            i,
+            inst,
+            seed=seeds[i],
+            max_enumerate=max_enumerate,
+            n_samples=n_samples,
+            batch_size=batch_size,
+        )
+        for i, inst in enumerate(instances)
+    ]
+
+    def launch_stage2(blocks) -> None:
+        # blocks: [(state, block[batch_size, state.n], true_b)], applied in
+        # order so per-state incumbent evolution matches the solo flow.
+        for g0 in range(0, len(blocks), I):
+            group = blocks[g0 : g0 + I]
+            rack = np.zeros((B2, dims.n_pad), dtype=np.int32)
+            iid = np.zeros(B2, dtype=np.int32)
+            for s, (st, blk, _tb) in enumerate(group):
+                lo = s * batch_size
+                rack[lo : lo + batch_size, : st.n] = blk
+                iid[lo : lo + batch_size] = st.idx
+            vals = np.asarray(fn(jnp.asarray(rack), jnp.asarray(iid), *eval_tables))
+            launches[1] += 1
+            for s, (st, blk, tb) in enumerate(group):
+                lo = s * batch_size
+                st.apply_scores(blk, vals[lo : lo + tb])
+
+    def launch_stage1(reqs):
+        # reqs: [(state, chunk)] -> per-request float32 LB arrays.
+        if not reqs:
+            return []
+        if not use_kernel:
+            launches[0] += len(reqs)
+            return [
+                batched_lower_bound(
+                    st.inst, chunk, use_kernel=False, contention=contention
+                )
+                for st, chunk in reqs
+            ]
+        out = [np.empty(chunk.shape[0], np.float32) for _, chunk in reqs]
+        pieces = []
+        for ri, (_st, chunk) in enumerate(reqs):
+            for off in range(0, chunk.shape[0], batch_size):
+                pieces.append((ri, off, chunk[off : off + batch_size]))
+        for g0 in range(0, len(pieces), I):
+            group = pieces[g0 : g0 + I]
+            rack = np.zeros((B1, dims.n_pad), dtype=np.int32)
+            iid = np.zeros(B1, dtype=np.int32)
+            for s, (ri, _off, rows) in enumerate(group):
+                st = reqs[ri][0]
+                lo = s * batch_size
+                rack[lo : lo + rows.shape[0], : st.n] = rows
+                iid[lo : lo + batch_size] = st.idx
+            lbs = np.asarray(
+                _fleet_lb_device(
+                    jnp.asarray(rack),
+                    jnp.asarray(iid),
+                    *lb_args,
+                    M_pad=dims.M_pad,
+                    n_iters=dims.n_iters,
+                    block_b=min(1024, B1),
+                    contention=contention,
+                )
+            )
+            launches[0] += 1
+            for s, (ri, off, rows) in enumerate(group):
+                lo = s * batch_size
+                out[ri][off : off + rows.shape[0]] = lbs[lo : lo + rows.shape[0]]
+        return out
+
+    def prune_and_score(round_chunks) -> None:
+        prune_reqs = [
+            (st, chunk)
+            for st, chunk in round_chunks
+            if lb_prune and np.isfinite(st.best_val)
+        ]
+        lbs_list = launch_stage1(prune_reqs)
+        lbs_by_state = {
+            id(st): lbs for (st, _), lbs in zip(prune_reqs, lbs_list)
+        }
+        blocks = []
+        for st, chunk in round_chunks:
+            blocks += st.consider(chunk, lbs_by_state.get(id(st)))
+        launch_stage2(blocks)
+
+    # Main sweep: one chunk per instance per lockstep round.
+    while any(st.pos < st.cands.shape[0] for st in states):
+        round_chunks = []
+        for st in states:
+            chunk = st.next_chunk()
+            if chunk is not None:
+                round_chunks.append((st, chunk))
+        prune_and_score(round_chunks)
+    blocks = []
+    for st in states:
+        blocks += st.flush_partial()
+    launch_stage2(blocks)
+    for st in states:
+        assert st.best_rack is not None
+
+    # Refinement: lockstep local search for sampled-regime instances, each
+    # stopping independently at its first non-improving round.
+    active = [st for st in states if st.sampled] if refine_rounds > 0 else []
+    for _ in range(refine_rounds):
+        if not active:
+            break
+        round_chunks = []
+        for st in active:
+            st.prev_best = st.best_val
+            round_chunks.append(
+                (st, _mutate_pool(st.rng_refine, st.best_rack, st.inst, refine_pool))
+            )
+        prune_reqs = [
+            (st, chunk)
+            for st, chunk in round_chunks
+            if lb_prune and np.isfinite(st.best_val)
+        ]
+        lbs_list = launch_stage1(prune_reqs)
+        lbs_by_state = {id(st): lbs for (st, _), lbs in zip(prune_reqs, lbs_list)}
+        blocks = []
+        for st, chunk in round_chunks:
+            blocks += st.consider(chunk, lbs_by_state.get(id(st)))
+            blocks += st.flush_partial()
+        launch_stage2(blocks)
+        for st in active:
+            st.refine_rounds_run += 1
+        active = [st for st in active if st.best_val < st.prev_best - 1e-9]
+
+    results = []
+    for st in states:
+        sched = simulate(st.inst, st.best_rack, use_wireless=use_wireless)
+        results.append(
+            VectorizedResult(
+                schedule=sched,
+                makespan=sched.makespan,
+                n_evaluated=st.n_eval,
+                best_assignment=st.best_rack,
+                n_candidates=st.n_cands,
+                n_pruned=st.n_pruned,
+                refine_rounds=st.refine_rounds_run,
+            )
+        )
+    stats = {
+        "n_stage1_launches": launches[0],
+        "n_stage2_launches": launches[1],
+        "n_stage1_traces": LB_TRACE_COUNT - t1_0,
+        "n_stage2_traces": TRACE_COUNT - t2_0,
+    }
+    return results, stats
+
+
 def vectorized_search(
     inst: ProblemInstance,
     max_enumerate: int = 200_000,
@@ -488,114 +945,87 @@ def vectorized_search(
     use_kernel: bool = True,
     refine_rounds: int = 4,
     refine_pool: int = 1024,
+    contention: bool = True,
 ) -> VectorizedResult:
     """Best-of-batch schedule search with bound-driven pruning.
 
     Enumerates all canonical assignments when that is small enough, else
-    samples. Each batch first passes through the Pallas critical-path bound
-    (stage 1); only candidates whose bound beats the incumbent are scheduled
-    by the batched greedy evaluator (stage 2). In the sampled regime a
-    local-search refinement loop mutates the incumbent until no round
-    improves it. The winner is re-executed with the exact host simulator
-    (which can only improve on the vectorized non-delay score) and verified.
+    samples. Each batch first passes through the combined §IV-A Pallas
+    bound (stage 1); only candidates whose bound beats the incumbent are
+    scheduled by the batched greedy evaluator (stage 2). In the sampled
+    regime a local-search refinement loop mutates the incumbent until no
+    round improves it. The winner is re-executed with the exact host
+    simulator (which can only improve on the vectorized non-delay score)
+    and verified. The fleet-of-one special case of :func:`schedule_fleet`.
     """
-    job = inst.job
-    n, M = job.n_tasks, inst.n_racks
-    # Bell-number guard: enumerate if the canonical count fits the budget.
-    cands = enumerate_assignments(n, M, limit=max_enumerate + 1)
-    sampled = cands.shape[0] > max_enumerate
-    if sampled:
-        rng = np.random.default_rng(seed)
-        cands = np.concatenate(
-            [
-                enumerate_assignments(n, min(2, M), limit=n_samples),
-                sample_assignments(rng, n, M, n_samples),
-            ],
-            axis=0,
-        )
-    evaluate = make_batched_evaluator(inst, use_wireless=use_wireless)
+    results, _ = _run_fleet(
+        [inst],
+        max_enumerate=max_enumerate,
+        n_samples=n_samples,
+        seeds=[seed],
+        use_wireless=use_wireless,
+        batch_size=batch_size,
+        lb_prune=lb_prune,
+        use_kernel=use_kernel,
+        contention=contention,
+        refine_rounds=refine_rounds,
+        refine_pool=refine_pool,
+    )
+    return results[0]
 
-    best_val = np.inf
-    best_rack: np.ndarray | None = None
-    n_eval = 0
-    n_pruned = 0
-    n_cands = 0
-    # Stage-1 survivors queue here and are scored in fixed-size batches, so
-    # the whole search compiles exactly one stage-2 program shape no matter
-    # how pruning fragments the candidate stream.
-    buffer: list[np.ndarray] = []
-    buffered = 0
 
-    def score(chunk: np.ndarray) -> None:
-        nonlocal best_val, best_rack, n_eval
-        true_b = chunk.shape[0]
-        if true_b < batch_size:
-            # Pad partial flushes to the one stage-2 batch shape (repeats of
-            # row 0 are discarded below) so pruning's fragmentation never
-            # triggers a fresh compile.
-            chunk = np.concatenate(
-                [chunk, np.tile(chunk[:1], (batch_size - true_b, 1))], axis=0
-            )
-        vals = np.asarray(evaluate(chunk))[:true_b]
-        n_eval += true_b
-        j = int(np.argmin(vals))
-        if vals[j] < best_val:
-            best_val = float(vals[j])
-            best_rack = chunk[j].astype(np.int64)
+def schedule_fleet(
+    instances,
+    max_enumerate: int = 200_000,
+    n_samples: int = 8192,
+    seed=0,
+    use_wireless: bool = True,
+    batch_size: int = 8192,
+    lb_prune: bool = True,
+    use_kernel: bool = True,
+    refine_rounds: int = 4,
+    refine_pool: int = 1024,
+    contention: bool = True,
+) -> FleetResult:
+    """Solve a heterogeneous fleet of instances in one padded mega-batch.
 
-    def flush(partial: bool = False) -> None:
-        nonlocal buffer, buffered
-        if not buffered:
-            return
-        pool = np.concatenate(buffer, axis=0) if len(buffer) > 1 else buffer[0]
-        n_full = (pool.shape[0] // batch_size) * batch_size
-        for i in range(0, n_full, batch_size):
-            score(pool[i : i + batch_size])
-        tail = pool[n_full:]
-        if partial and tail.shape[0]:
-            score(tail)
-            tail = tail[:0]
-        buffer = [tail] if tail.shape[0] else []
-        buffered = tail.shape[0]
+    All instances are padded to one shared size bucket and their candidate
+    streams advance in lockstep: each round contributes one chunk per
+    instance to a single stage-1 bound launch and the survivors to a single
+    sharded stage-2 evaluation launch, so the whole fleet compiles at most
+    one program per stage and amortizes every dispatch across jobs.
 
-    def consider(chunk: np.ndarray) -> None:
-        nonlocal n_pruned, n_cands, buffered
-        n_cands += chunk.shape[0]
-        if lb_prune and np.isfinite(best_val):
-            lbs = batched_lower_bound(inst, chunk, use_kernel=use_kernel)
-            keep = lbs < best_val - 1e-6
-            n_pruned += int((~keep).sum())
-            chunk = chunk[keep]
-        if chunk.shape[0] == 0:
-            return
-        buffer.append(chunk)
-        buffered += chunk.shape[0]
-        if buffered >= batch_size:
-            flush()
-
-    for i in range(0, cands.shape[0], batch_size):
-        consider(cands[i : i + batch_size])
-    flush(partial=True)
-    assert best_rack is not None
-
-    rounds_run = 0
-    if sampled and refine_rounds > 0:
-        rng = np.random.default_rng(seed + 1)
-        for _ in range(refine_rounds):
-            prev = best_val
-            consider(_mutate_pool(rng, best_rack, inst, refine_pool))
-            flush(partial=True)
-            rounds_run += 1
-            if best_val >= prev - 1e-9:
-                break
-
-    sched = simulate(inst, best_rack, use_wireless=use_wireless)
-    return VectorizedResult(
-        schedule=sched,
-        makespan=sched.makespan,
-        n_evaluated=n_eval,
-        best_assignment=best_rack,
-        n_candidates=n_cands,
-        n_pruned=n_pruned,
-        refine_rounds=rounds_run,
+    ``seed`` may be a scalar (shared) or a per-instance sequence; with the
+    same seed and parameters, ``results[i]`` is bit-for-bit identical to
+    ``vectorized_search(instances[i], ...)`` run alone.
+    """
+    instances = list(instances)
+    if not instances:
+        raise ValueError("schedule_fleet needs at least one instance")
+    if np.ndim(seed) == 0:
+        seeds = [int(seed)] * len(instances)
+    else:
+        seeds = [int(s) for s in seed]
+        if len(seeds) != len(instances):
+            raise ValueError("one seed per instance required")
+    results, stats = _run_fleet(
+        instances,
+        max_enumerate=max_enumerate,
+        n_samples=n_samples,
+        seeds=seeds,
+        use_wireless=use_wireless,
+        batch_size=batch_size,
+        lb_prune=lb_prune,
+        use_kernel=use_kernel,
+        contention=contention,
+        refine_rounds=refine_rounds,
+        refine_pool=refine_pool,
+    )
+    return FleetResult(
+        results=results,
+        makespans=np.asarray([r.makespan for r in results]),
+        n_candidates=sum(r.n_candidates for r in results),
+        n_pruned=sum(r.n_pruned for r in results),
+        n_evaluated=sum(r.n_evaluated for r in results),
+        **stats,
     )

@@ -25,6 +25,7 @@ def tpu_compiler_params(dimension_semantics: tuple[str, ...]):
     return cls(dimension_semantics=dimension_semantics)
 
 
+from repro.kernels.cpm import batched_combined_lb as _combined_lb
 from repro.kernels.cpm import batched_critical_path as _cpm
 from repro.kernels.decode_attention import decode_attention_fwd as _decode
 from repro.kernels.flash_attention import flash_attention_fwd as _flash
@@ -33,6 +34,7 @@ __all__ = [
     "flash_attention",
     "decode_attention",
     "batched_critical_path",
+    "batched_combined_lb",
     "tpu_compiler_params",
 ]
 
@@ -54,3 +56,9 @@ def decode_attention(q, k, v, kv_len, block_kv=512):
 
 def batched_critical_path(w, block_b=8, n_iters=None):
     return _cpm(w, block_b=block_b, n_iters=n_iters, interpret=_interpret())
+
+
+def batched_combined_lb(w, p, extra, block_b=8, n_iters=None):
+    return _combined_lb(
+        w, p, extra, block_b=block_b, n_iters=n_iters, interpret=_interpret()
+    )

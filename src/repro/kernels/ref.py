@@ -6,7 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ref_flash_attention", "ref_decode_attention", "ref_critical_path"]
+__all__ = [
+    "ref_flash_attention",
+    "ref_decode_attention",
+    "ref_critical_path",
+    "ref_combined_lb",
+]
 
 
 def ref_flash_attention(
@@ -62,3 +67,20 @@ def ref_critical_path(w: np.ndarray) -> np.ndarray:
         cand = dist[:, :, None] + w  # [B, u, v]
         dist = np.maximum(dist, cand.max(axis=1))
     return dist.astype(np.float32)
+
+
+def ref_combined_lb(
+    w: np.ndarray,      # [B, n, n] max-plus adjacency (-inf = no edge)
+    p: np.ndarray,      # [B, n] per-row task durations (0 on padding)
+    extra: np.ndarray,  # [B] contention bound terms (-inf to disable)
+) -> np.ndarray:
+    """Oracle for the fused §IV-A combined stage-1 bound kernel.
+
+    lb[b] = max(max_v dist[b, v] + p[b, v], extra[b]); all-padding rows
+    (no edges, zero durations, -inf extra) yield exactly 0.
+    """
+    dist = ref_critical_path(w).astype(np.float64)
+    p = np.asarray(p, dtype=np.float64)
+    extra = np.asarray(extra, dtype=np.float64).reshape(-1)
+    lb = np.maximum((dist + p).max(axis=1), extra)
+    return lb.astype(np.float32)

@@ -8,6 +8,7 @@ pytestmark = pytest.mark.slow  # interpret-mode oracle sweeps dominate suite wal
 
 from repro.kernels import ops
 from repro.kernels.ref import (
+    ref_combined_lb,
     ref_critical_path,
     ref_decode_attention,
     ref_flash_attention,
@@ -92,6 +93,68 @@ def test_cpm_kernel_matches_oracle(B, n):
     got = np.asarray(ops.batched_critical_path(jnp.asarray(w, jnp.float32)))
     want = ref_critical_path(w)
     np.testing.assert_allclose(got, want, atol=1e-4)
+
+
+def _ragged_lb_megabatch(rng, B, n):
+    """Mega-batch mimicking a heterogeneous fleet: each row a different-size
+    DAG padded to n (padded nodes have no edges and zero duration), some
+    rows all-padding."""
+    w = np.full((B, n, n), -np.inf)
+    p = np.zeros((B, n), np.float32)
+    extra = np.full(B, -np.inf, np.float32)
+    for b in range(B):
+        nb = int(rng.integers(0, n + 1))  # 0 = all-padding row
+        p[b, :nb] = rng.uniform(1, 100, size=nb)
+        for _ in range(3 * nb):
+            if nb >= 2:
+                u, v = sorted(rng.choice(nb, 2, replace=False))
+                w[b, u, v] = max(w[b, u, v], rng.uniform(1, 10))
+        if rng.uniform() < 0.7 and nb:
+            extra[b] = rng.uniform(0, 300)
+    return w, p, extra
+
+
+@pytest.mark.parametrize("B,n,block_b", [(13, 8, 8), (32, 12, 8), (257, 16, 64)])
+def test_combined_lb_kernel_matches_oracle_ragged(B, n, block_b):
+    """Fused contention-LB kernel vs the NumPy reference on ragged/padded
+    mega-batches, including all-padding rows and odd batch sizes."""
+    rng = np.random.default_rng(B * n)
+    w, p, extra = _ragged_lb_megabatch(rng, B, n)
+    got = np.asarray(
+        ops.batched_combined_lb(
+            jnp.asarray(w, jnp.float32), jnp.asarray(p), jnp.asarray(extra),
+            block_b=block_b,
+        )
+    )
+    want = ref_combined_lb(w, p, extra)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-5)
+    # all-padding rows come out exactly 0 (no work, disabled extra)
+    empty = (p.sum(axis=1) == 0) & ~np.isfinite(extra)
+    assert (got[empty] == 0.0).all()
+
+
+def test_combined_lb_kernel_extra_term_dominates():
+    """Rows where the contention term exceeds the critical path must return
+    the contention term (max fusion, not overwrite)."""
+    rng = np.random.default_rng(7)
+    B, n = 16, 8
+    w, p, _ = _ragged_lb_megabatch(rng, B, n)
+    cpm_only = ref_combined_lb(w, p, np.full(B, -np.inf, np.float32))
+    extra = cpm_only + rng.uniform(1, 50, size=B).astype(np.float32)
+    got = np.asarray(
+        ops.batched_combined_lb(
+            jnp.asarray(w, jnp.float32), jnp.asarray(p), jnp.asarray(extra)
+        )
+    )
+    np.testing.assert_allclose(got, extra, atol=1e-4, rtol=1e-5)
+    # and when extra is dominated, the critical-path bound survives
+    got_lo = np.asarray(
+        ops.batched_combined_lb(
+            jnp.asarray(w, jnp.float32), jnp.asarray(p),
+            jnp.asarray(cpm_only - 1.0),
+        )
+    )
+    np.testing.assert_allclose(got_lo, cpm_only, atol=1e-4, rtol=1e-5)
 
 
 def test_jnp_flash_gradients_match_naive():

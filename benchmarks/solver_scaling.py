@@ -127,10 +127,69 @@ def run_fleet_megabatch():
     )
 
 
+def run_portfolio_refinement():
+    """Portfolio vs plain local search at the same candidate budget.
+
+    Dense sampled-regime shuffles (full bipartite MapReduce) with a weak
+    initial sample, so refinement does the heavy lifting; both arms get
+    identical rounds x pool proposals. Reported JCT is the mean final
+    makespan across seeds; per-strategy yield comes from the fleet's
+    aggregated ``strategy_stats``. The table in ``docs/benchmarks.md`` is
+    produced by this function.
+    """
+    from repro.core.dag import make_onestage_mapreduce
+
+    n_seeds = 6 if not FULL else 12
+    rounds = 16
+    insts = [
+        ProblemInstance(
+            job=make_onestage_mapreduce(
+                np.random.default_rng(s), n_map=9, n_reduce=9, rho=1.0
+            ),
+            n_racks=6,
+            n_wireless=1,
+        )
+        for s in range(n_seeds)
+    ]
+    kw = dict(
+        max_enumerate=500,
+        n_samples=64,
+        batch_size=512,
+        refine_rounds=rounds,
+        refine_pool=256,
+        refine_patience=rounds,
+        seed=list(range(n_seeds)),
+    )
+    t0 = time.perf_counter()
+    plain = schedule_fleet(insts, strategies=("mutation",), **kw)
+    wall_plain = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    port = schedule_fleet(insts, strategies="portfolio", **kw)
+    wall_port = time.perf_counter() - t0
+    wins = sum(
+        q.makespan < p.makespan - 1e-9
+        for p, q in zip(plain.results, port.results)
+    )
+    yields = ";".join(
+        f"{name}:y={s.yield_per_eval:.3f},evald={s.evaluated},w={s.weight:.2f}"
+        for name, s in sorted(port.strategy_stats.items())
+    )
+    emit(
+        "portfolio_vs_local_search",
+        1e6 * wall_port / n_seeds,
+        f"jct_plain={plain.makespans.mean():.2f}"
+        f";jct_portfolio={port.makespans.mean():.2f}"
+        f";reduction={100 * (1 - port.makespans.mean() / plain.makespans.mean()):.1f}%"
+        f";wins={wins}/{n_seeds};plain_ms={1e3 * wall_plain:.0f}"
+        f";{yields}",
+    )
+
+
 def main():
     run()
     run_sampled_throughput()
     run_fleet_megabatch()
+    run_portfolio_refinement()
 
 
 if __name__ == "__main__":

@@ -2,8 +2,10 @@
 a day's worth of periodic jobs ([15]-style workload) on a hybrid DCN. The
 heterogeneous fleet is solved in ONE padded mega-batch (`schedule_fleet`:
 shared launches + combined §IV-A LB pruning across all jobs at once),
-cross-checked per job against exact B&B under wired-only vs
-wireless-augmented operation, plus a straggler re-plan.
+with the full refinement portfolio (mutation + elite crossover +
+simulated annealing under the yield-driven allocator) polishing the
+sampled-regime jobs, cross-checked per job against exact B&B under
+wired-only vs wireless-augmented operation, plus a straggler re-plan.
 
 Run:  PYTHONPATH=src python examples/schedule_cluster.py
 """
@@ -24,8 +26,11 @@ def main() -> None:
         job = random_job(np.random.default_rng(100 + j), None, rho=0.5)
         insts.append(ProblemInstance(job=job, n_racks=8, n_wireless=2))
 
-    # The whole heterogeneous fleet in one mega-batch search.
-    fleet = schedule_fleet(insts, max_enumerate=20_000, n_samples=2048)
+    # The whole heterogeneous fleet in one mega-batch search; sampled-regime
+    # jobs get the full strategy portfolio for refinement.
+    fleet = schedule_fleet(
+        insts, max_enumerate=20_000, n_samples=2048, strategies="portfolio"
+    )
 
     for j, (inst, rv) in enumerate(zip(insts, fleet.results)):
         r0 = solve_bnb(wired_only(inst), time_limit=10)
@@ -49,6 +54,13 @@ def main() -> None:
         f"{fleet.n_stage1_launches}+{fleet.n_stage2_launches} shared launches "
         f"({fleet.n_stage1_traces}+{fleet.n_stage2_traces} program traces)"
     )
+    if fleet.strategy_stats:
+        counters = "; ".join(
+            f"{name}: {s.evaluated} evaluated, {s.improved} improving, "
+            f"yield={s.yield_per_eval:.3f}, w={s.weight:.2f}"
+            for name, s in sorted(fleet.strategy_stats.items())
+        )
+        print(f"refinement portfolio: {counters}")
 
     # Straggler mitigation on the training-integration side.
     cfg = get_config("llama3_2_3b")

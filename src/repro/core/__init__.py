@@ -10,6 +10,8 @@ Layers:
   bisection                   — §IV-D feasibility-subproblem decomposition
   bnb                         — beyond-paper combinatorial exact B&B
   vectorized                  — beyond-paper JAX-batched assignment search
+  portfolio                   — refinement strategy portfolio (mutation /
+                                crossover / annealing + yield allocator)
   baselines                   — §V comparison schedulers
 """
 
@@ -42,6 +44,16 @@ from repro.core.vectorized import (
     schedule_fleet,
     vectorized_search,
 )
+from repro.core.portfolio import (
+    DEFAULT_PORTFOLIO,
+    AnnealingStrategy,
+    CrossoverStrategy,
+    MutationStrategy,
+    Portfolio,
+    Strategy,
+    StrategyStats,
+    build_strategies,
+)
 from repro.core.baselines import (
     BASELINES,
     g_list_master_schedule,
@@ -67,6 +79,9 @@ __all__ = [
     "BnbResult", "solve_bnb",
     "VectorizedResult", "vectorized_search",
     "FleetResult", "schedule_fleet",
+    "DEFAULT_PORTFOLIO", "AnnealingStrategy", "CrossoverStrategy",
+    "MutationStrategy", "Portfolio", "Strategy", "StrategyStats",
+    "build_strategies",
     "BASELINES", "g_list_master_schedule", "g_list_schedule", "list_schedule",
     "partition_schedule", "random_schedule", "single_rack_schedule",
     "wired_only",

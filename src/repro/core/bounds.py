@@ -164,6 +164,21 @@ def partial_assignment_bound(
     shared bound hook of the combinatorial B&B
     (:func:`repro.core.bnb.solve_bnb`) and the single-assignment special
     case used by :func:`contention_lower_bounds`.
+
+    Args:
+      inst: the instance.
+      rack: int[n_tasks] with ``rack[v] = -1`` for undecided tasks; decided
+        entries must be in ``[0, inst.n_racks)``.
+      topo: int[n_tasks] topological order of the DAG
+        (``inst.job.topo_order()``; passed in so B&B amortizes it).
+      min_cost: float[n_edges] optimistic per-edge cost for edges with at
+        least one undecided endpoint — ``min(r, q, q̌)`` per edge; copied,
+        never mutated. Decided edges use their exact local/network cost.
+
+    Returns:
+      A float lower bound on the optimal makespan of any completion of
+      ``rack`` (monotone: deciding more tasks never decreases it).
+      Admissible for both exact B&B pruning and the greedy evaluator.
     """
     job = inst.job
     cost = min_cost.copy()

@@ -38,6 +38,14 @@ one sharded launch (and at most one trace) per stage instead of one per
 instance. :class:`FleetResult` reports per-instance results plus fleet
 prune / launch / trace counters.
 
+  Refinement (sampled regime): the incumbent stream feeds the strategy
+  portfolio of :mod:`repro.core.portfolio` — mutation local search by
+  default (bit-for-bit the pre-portfolio loop), optionally elite
+  crossover and simulated annealing with a multiplicative-weights budget
+  allocator (``strategies="portfolio"``). All strategies' proposals ride
+  the same lockstep launches and the same stage-1 pruner; per-strategy
+  counters surface as ``strategy_stats`` on the results.
+
 This module is an *incumbent generator / pruner*: the winning assignment is
 re-executed exactly with the host simulator and verified by the OP checker.
 Exactness guarantees come from `bnb`/`solver_milp`; tests assert the
@@ -57,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bounds as bounds_mod
+from repro.core import portfolio as portfolio_mod
 from repro.core.instance import ProblemInstance
 from repro.core.schedule import Schedule
 from repro.core.simulator import OP_EDGE, OP_TASK, build_op_tables, pad_op_tables, simulate
@@ -572,6 +581,22 @@ def batched_lower_bound(
 
 @dataclasses.dataclass
 class VectorizedResult:
+    """Outcome of one instance's vectorized search.
+
+    Attributes:
+      schedule: the winning assignment re-executed *exactly* by the host
+        simulator (OP-checked; can only improve on the device score).
+      makespan: ``schedule.makespan``.
+      n_evaluated: candidates scored by the stage-2 greedy evaluator.
+      best_assignment: int64[n_tasks] winning task->rack assignment.
+      n_candidates: candidates considered (``n_evaluated + n_pruned``).
+      n_pruned: candidates discarded by the stage-1 §IV-A bound.
+      refine_rounds: refinement rounds actually run (sampled regime only).
+      strategy_stats: per-strategy refinement counters keyed by strategy
+        name (:class:`repro.core.portfolio.StrategyStats`); all-zero when
+        the instance was enumerated exhaustively or ``refine_rounds=0``.
+    """
+
     schedule: Schedule
     makespan: float
     n_evaluated: int
@@ -579,6 +604,9 @@ class VectorizedResult:
     n_candidates: int = 0
     n_pruned: int = 0
     refine_rounds: int = 0
+    strategy_stats: dict[str, portfolio_mod.StrategyStats] = dataclasses.field(
+        default_factory=dict
+    )
 
 
 @dataclasses.dataclass
@@ -590,6 +618,16 @@ class FleetResult:
     device dispatches the whole fleet cost; trace counters how many fresh
     program traces (0 when a same-bucket fleet already warmed the caches,
     at most one per stage otherwise).
+
+    Attributes:
+      results: per-instance :class:`VectorizedResult`, in input order.
+      makespans: float64[n_instances] of per-instance makespans.
+      n_candidates / n_pruned / n_evaluated: fleet-total candidate counters
+        (sums of the per-instance counters).
+      n_stage1_launches / n_stage2_launches: device dispatches per stage.
+      n_stage1_traces / n_stage2_traces: fresh program traces per stage.
+      strategy_stats: fleet-aggregated per-strategy refinement counters
+        (counter sums; ``weight`` is the mean final allocator weight).
     """
 
     results: list[VectorizedResult]
@@ -601,36 +639,15 @@ class FleetResult:
     n_stage2_launches: int
     n_stage1_traces: int
     n_stage2_traces: int
+    strategy_stats: dict[str, portfolio_mod.StrategyStats] = dataclasses.field(
+        default_factory=dict
+    )
 
 
-def _mutate_pool(
-    rng: np.random.Generator,
-    best: np.ndarray,
-    inst: ProblemInstance,
-    count: int,
-) -> np.ndarray:
-    """Seeded local-search mutations of the incumbent assignment.
-
-    Mix of single-task resamples, co-locations along DAG edges (move the two
-    endpoints of a transfer onto one rack), and rack swaps between two tasks.
-    """
-    n, M = best.shape[0], inst.n_racks
-    pool = np.tile(best.astype(np.int32), (count, 1))
-    kind = rng.integers(0, 3, size=count)
-    edges = inst.job.edges
-    for i in range(count):
-        if kind[i] == 0 or edges.shape[0] == 0:
-            # Resample 1-2 random coordinates.
-            for v in rng.integers(0, n, size=int(rng.integers(1, 3))):
-                pool[i, v] = rng.integers(0, M)
-        elif kind[i] == 1:
-            e = int(rng.integers(0, edges.shape[0]))
-            u, v = int(edges[e, 0]), int(edges[e, 1])
-            pool[i, v] = pool[i, u]
-        else:
-            u, v = rng.integers(0, n, size=2)
-            pool[i, u], pool[i, v] = pool[i, v], pool[i, u]
-    return pool
+# The refinement mutation kernel now lives in repro.core.portfolio (it is
+# the "mutation" portfolio strategy); kept aliased for callers of the old
+# private name.
+_mutate_pool = portfolio_mod.mutate_pool
 
 
 class _InstanceState:
@@ -654,6 +671,9 @@ class _InstanceState:
         max_enumerate: int,
         n_samples: int,
         batch_size: int,
+        strategies=None,
+        refine_pool: int = 1024,
+        patience: int = 1,
     ):
         self.idx = idx
         self.inst = inst
@@ -675,6 +695,7 @@ class _InstanceState:
         self.cands = cands
         self.pos = 0
         self.buffer: list[np.ndarray] = []
+        self.tag_buffer: list[np.ndarray] = []
         self.buffered = 0
         self.best_val = np.inf
         self.best_rack: np.ndarray | None = None
@@ -684,6 +705,14 @@ class _InstanceState:
         self.rng_refine = np.random.default_rng(seed + 1)
         self.refine_rounds_run = 0
         self.prev_best = np.inf
+        self.patience = patience
+        self.stall = 0
+        self.portfolio = portfolio_mod.Portfolio(
+            portfolio_mod.build_strategies(strategies),
+            inst,
+            self.rng_refine,
+            pool_size=refine_pool,
+        )
 
     def next_chunk(self) -> np.ndarray | None:
         if self.pos >= self.cands.shape[0]:
@@ -692,28 +721,53 @@ class _InstanceState:
         self.pos += self.batch_size
         return chunk
 
-    def consider(self, chunk: np.ndarray, lbs: np.ndarray | None):
+    def consider(self, chunk: np.ndarray, lbs: np.ndarray | None, tags=None):
         """Prune a chunk against the incumbent, buffer survivors, emit any
-        full stage-2 blocks. Returns [(state, block, true_b)]."""
+        full stage-2 blocks. ``tags`` are per-row portfolio strategy ids
+        (-1 = untagged sweep candidates) threaded through buffering so
+        scores can be credited back. Returns [(state, block, true_b, tags)].
+        """
         self.n_cands += chunk.shape[0]
+        if tags is None:
+            tags = np.full(chunk.shape[0], -1, dtype=np.int32)
         if lbs is not None:
             keep = lbs < self.best_val - 1e-6
             self.n_pruned += int((~keep).sum())
+            self.portfolio.note_pruned(tags[~keep])
             chunk = chunk[keep]
+            tags = tags[keep]
         if chunk.shape[0]:
             self.buffer.append(chunk)
+            self.tag_buffer.append(tags)
             self.buffered += chunk.shape[0]
         return self._emit_full()
+
+    def _cat_buffer(self):
+        pool = (
+            np.concatenate(self.buffer, axis=0)
+            if len(self.buffer) > 1
+            else self.buffer[0]
+        )
+        tags = (
+            np.concatenate(self.tag_buffer, axis=0)
+            if len(self.tag_buffer) > 1
+            else self.tag_buffer[0]
+        )
+        return pool, tags
 
     def _emit_full(self):
         if self.buffered < self.batch_size:
             return []
-        pool = np.concatenate(self.buffer, axis=0) if len(self.buffer) > 1 else self.buffer[0]
+        pool, tags = self._cat_buffer()
         bs = self.batch_size
         n_full = (pool.shape[0] // bs) * bs
-        blocks = [(self, pool[i : i + bs], bs) for i in range(0, n_full, bs)]
-        tail = pool[n_full:]
+        blocks = [
+            (self, pool[i : i + bs], bs, tags[i : i + bs])
+            for i in range(0, n_full, bs)
+        ]
+        tail, tail_tags = pool[n_full:], tags[n_full:]
         self.buffer = [tail] if tail.shape[0] else []
+        self.tag_buffer = [tail_tags] if tail.shape[0] else []
         self.buffered = tail.shape[0]
         return blocks
 
@@ -722,27 +776,28 @@ class _InstanceState:
         pad-row scores are discarded on apply)."""
         blocks = self._emit_full()
         if self.buffered:
-            tail = (
-                np.concatenate(self.buffer, axis=0)
-                if len(self.buffer) > 1
-                else self.buffer[0]
-            )
+            tail, tail_tags = self._cat_buffer()
             true_b = tail.shape[0]
             block = np.concatenate(
                 [tail, np.tile(tail[:1], (self.batch_size - true_b, 1))], axis=0
             )
-            blocks.append((self, block, true_b))
+            blocks.append((self, block, true_b, tail_tags))
             self.buffer = []
+            self.tag_buffer = []
             self.buffered = 0
         return blocks
 
-    def apply_scores(self, block: np.ndarray, vals: np.ndarray) -> None:
-        """Strict-improvement incumbent update over one block's true rows."""
+    def apply_scores(self, block: np.ndarray, vals: np.ndarray, tags) -> None:
+        """Strict-improvement incumbent update over one block's true rows,
+        then feed the scored rows back to the portfolio (elite pool plus
+        per-strategy credit for tagged refinement rows)."""
         self.n_eval += vals.shape[0]
+        prev_best = self.best_val
         j = int(np.argmin(vals))
         if vals[j] < self.best_val:
             self.best_val = float(vals[j])
             self.best_rack = block[j].astype(np.int64)
+        self.portfolio.observe(tags, block[: vals.shape[0]], vals, prev_best)
 
 
 def _run_fleet(
@@ -758,6 +813,8 @@ def _run_fleet(
     contention: bool,
     refine_rounds: int,
     refine_pool: int,
+    strategies=None,
+    refine_patience: int | None = None,
 ):
     """Lockstep fleet driver: one mega-batch launch geometry per stage.
 
@@ -781,6 +838,11 @@ def _run_fleet(
     if B2 % n_dev:
         B2 += n_dev - B2 % n_dev
 
+    # Patience default: stop at the first non-improving round (the
+    # pre-portfolio rule) for a single strategy; give multi-strategy
+    # portfolios a few stalled rounds so annealing can tunnel.
+    if refine_patience is None:
+        refine_patience = 1 if portfolio_mod.spec_length(strategies) == 1 else 3
     states = [
         _InstanceState(
             i,
@@ -789,26 +851,30 @@ def _run_fleet(
             max_enumerate=max_enumerate,
             n_samples=n_samples,
             batch_size=batch_size,
+            strategies=strategies,
+            refine_pool=refine_pool,
+            patience=refine_patience,
         )
         for i, inst in enumerate(instances)
     ]
 
     def launch_stage2(blocks) -> None:
-        # blocks: [(state, block[batch_size, state.n], true_b)], applied in
-        # order so per-state incumbent evolution matches the solo flow.
+        # blocks: [(state, block[batch_size, state.n], true_b, tags)],
+        # applied in order so per-state incumbent evolution matches the
+        # solo flow.
         for g0 in range(0, len(blocks), I):
             group = blocks[g0 : g0 + I]
             rack = np.zeros((B2, dims.n_pad), dtype=np.int32)
             iid = np.zeros(B2, dtype=np.int32)
-            for s, (st, blk, _tb) in enumerate(group):
+            for s, (st, blk, _tb, _tg) in enumerate(group):
                 lo = s * batch_size
                 rack[lo : lo + batch_size, : st.n] = blk
                 iid[lo : lo + batch_size] = st.idx
             vals = np.asarray(fn(jnp.asarray(rack), jnp.asarray(iid), *eval_tables))
             launches[1] += 1
-            for s, (st, blk, tb) in enumerate(group):
+            for s, (st, blk, tb, tg) in enumerate(group):
                 lo = s * batch_size
-                st.apply_scores(blk, vals[lo : lo + tb])
+                st.apply_scores(blk, vals[lo : lo + tb], tg)
 
     def launch_stage1(reqs):
         # reqs: [(state, chunk)] -> per-request float32 LB arrays.
@@ -883,8 +949,12 @@ def _run_fleet(
     for st in states:
         assert st.best_rack is not None
 
-    # Refinement: lockstep local search for sampled-regime instances, each
-    # stopping independently at its first non-improving round.
+    # Refinement: the lockstep strategy portfolio for sampled-regime
+    # instances. Each round every active instance's portfolio proposes one
+    # tagged candidate pool (budget split across strategies by recent
+    # yield); proposals ride the shared stage-1/stage-2 launches exactly
+    # like sweep candidates. An instance stops independently after
+    # ``patience`` consecutive non-improving rounds.
     active = [st for st in states if st.sampled] if refine_rounds > 0 else []
     for _ in range(refine_rounds):
         if not active:
@@ -892,24 +962,31 @@ def _run_fleet(
         round_chunks = []
         for st in active:
             st.prev_best = st.best_val
-            round_chunks.append(
-                (st, _mutate_pool(st.rng_refine, st.best_rack, st.inst, refine_pool))
-            )
+            pool, tags = st.portfolio.begin_round(st.best_rack, st.best_val)
+            round_chunks.append((st, pool, tags))
         prune_reqs = [
             (st, chunk)
-            for st, chunk in round_chunks
-            if lb_prune and np.isfinite(st.best_val)
+            for st, chunk, _tags in round_chunks
+            if lb_prune and np.isfinite(st.best_val) and chunk.shape[0]
         ]
         lbs_list = launch_stage1(prune_reqs)
         lbs_by_state = {id(st): lbs for (st, _), lbs in zip(prune_reqs, lbs_list)}
         blocks = []
-        for st, chunk in round_chunks:
-            blocks += st.consider(chunk, lbs_by_state.get(id(st)))
+        for st, chunk, tags in round_chunks:
+            blocks += st.consider(chunk, lbs_by_state.get(id(st)), tags=tags)
             blocks += st.flush_partial()
         launch_stage2(blocks)
+        nxt = []
         for st in active:
+            st.portfolio.end_round(st.best_rack, st.best_val)
             st.refine_rounds_run += 1
-        active = [st for st in active if st.best_val < st.prev_best - 1e-9]
+            if st.best_val < st.prev_best - 1e-9:
+                st.stall = 0
+            else:
+                st.stall += 1
+            if st.stall < st.patience:
+                nxt.append(st)
+        active = nxt
 
     results = []
     for st in states:
@@ -923,6 +1000,7 @@ def _run_fleet(
                 n_candidates=st.n_cands,
                 n_pruned=st.n_pruned,
                 refine_rounds=st.refine_rounds_run,
+                strategy_stats=st.portfolio.stats,
             )
         )
     stats = {
@@ -946,6 +1024,8 @@ def vectorized_search(
     refine_rounds: int = 4,
     refine_pool: int = 1024,
     contention: bool = True,
+    strategies=None,
+    refine_patience: int | None = None,
 ) -> VectorizedResult:
     """Best-of-batch schedule search with bound-driven pruning.
 
@@ -953,10 +1033,48 @@ def vectorized_search(
     samples. Each batch first passes through the combined §IV-A Pallas
     bound (stage 1); only candidates whose bound beats the incumbent are
     scheduled by the batched greedy evaluator (stage 2). In the sampled
-    regime a local-search refinement loop mutates the incumbent until no
-    round improves it. The winner is re-executed with the exact host
-    simulator (which can only improve on the vectorized non-delay score)
-    and verified. The fleet-of-one special case of :func:`schedule_fleet`.
+    regime the incumbent is refined by the strategy portfolio of
+    :mod:`repro.core.portfolio`. The winner is re-executed with the exact
+    host simulator (which can only improve on the vectorized non-delay
+    score) and verified. The fleet-of-one special case of
+    :func:`schedule_fleet`.
+
+    Args:
+      inst: the problem instance.
+      max_enumerate: enumerate exhaustively iff the canonical assignment
+        count (restricted growth strings) is at most this; else sample.
+      n_samples: random candidates in the sampled regime (plus a 2-rack
+        canonical prefix of the same size).
+      seed: master seed. Sampling uses ``default_rng(seed)``; refinement
+        draws from ``default_rng(seed + 1)``. Fixed seed + fixed
+        parameters => bit-identical results across runs and across fleet
+        packings (device scores are float32-deterministic on one backend).
+      use_wireless: expose the instance's wireless subchannels to the
+        evaluator (``False`` models wired-only operation).
+      batch_size: stage-2 block size; candidate streams are chunked,
+        pruned, and re-blocked to exactly this many rows per launch.
+      lb_prune: enable stage-1 pruning (exact w.r.t. the greedy objective:
+        ``LB(c) >= incumbent`` implies c cannot improve the incumbent).
+      use_kernel: stage-1 via the fused Pallas kernel (else the portable
+        edge-list jit oracle).
+      refine_rounds: max refinement rounds (sampled regime only).
+      refine_pool: per-round refinement candidate budget, split across the
+        portfolio's strategies by recent yield.
+      contention: include the §IV-A contention terms (per-rack work +
+        aggregate channel work) in the stage-1 bound.
+      strategies: refinement portfolio spec for
+        :func:`repro.core.portfolio.build_strategies`. ``None`` (default)
+        is mutation-only local search — bit-for-bit the pre-portfolio
+        refinement loop; ``"portfolio"`` enables
+        mutation + elite crossover + simulated annealing under the
+        multiplicative-weights budget allocator.
+      refine_patience: stop refining after this many consecutive
+        non-improving rounds. ``None`` => 1 for a single strategy (the
+        pre-portfolio rule), 3 for a multi-strategy portfolio.
+
+    Returns:
+      :class:`VectorizedResult` (per-strategy refinement counters in
+      ``strategy_stats``).
     """
     results, _ = _run_fleet(
         [inst],
@@ -970,6 +1088,8 @@ def vectorized_search(
         contention=contention,
         refine_rounds=refine_rounds,
         refine_pool=refine_pool,
+        strategies=strategies,
+        refine_patience=refine_patience,
     )
     return results[0]
 
@@ -986,6 +1106,8 @@ def schedule_fleet(
     refine_rounds: int = 4,
     refine_pool: int = 1024,
     contention: bool = True,
+    strategies=None,
+    refine_patience: int | None = None,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of instances in one padded mega-batch.
 
@@ -994,14 +1116,41 @@ def schedule_fleet(
     instance to a single stage-1 bound launch and the survivors to a single
     sharded stage-2 evaluation launch, so the whole fleet compiles at most
     one program per stage and amortizes every dispatch across jobs.
+    Refinement proposals (one tagged pool per instance per round, from that
+    instance's private strategy portfolio) ride the same shared launches.
 
-    ``seed`` may be a scalar (shared) or a per-instance sequence; with the
-    same seed and parameters, ``results[i]`` is bit-for-bit identical to
-    ``vectorized_search(instances[i], ...)`` run alone.
+    Args:
+      instances: iterable of :class:`ProblemInstance` (at least one).
+      seed: scalar (shared by all instances) or one seed per instance.
+      strategies: portfolio spec shared by all instances; each instance
+        gets its own freshly built strategy objects, so pass registry
+        names (e.g. ``"portfolio"`` or ``("mutation", "crossover")``) or
+        zero-arg factories — live Strategy objects would alias state
+        across the fleet and are rejected for fleets of more than one.
+      (remaining arguments: see :func:`vectorized_search`.)
+
+    Determinism / solo equivalence: with the same seed and parameters,
+    ``results[i]`` is bit-for-bit identical to
+    ``vectorized_search(instances[i], ...)`` run alone — fleet packing
+    never changes any per-instance score, prune decision, or RNG draw.
+
+    Returns:
+      :class:`FleetResult` with per-instance results, fleet candidate /
+      launch / trace counters, and fleet-aggregated ``strategy_stats``.
     """
     instances = list(instances)
     if not instances:
         raise ValueError("schedule_fleet needs at least one instance")
+    if len(instances) > 1 and strategies is not None and not isinstance(strategies, str):
+        for item in strategies:
+            if (
+                not isinstance(item, (str, type))
+                and hasattr(item, "propose")
+            ):
+                raise ValueError(
+                    "fleets need per-instance strategy state: pass names or "
+                    "factories, not live Strategy objects"
+                )
     if np.ndim(seed) == 0:
         seeds = [int(seed)] * len(instances)
     else:
@@ -1020,6 +1169,8 @@ def schedule_fleet(
         contention=contention,
         refine_rounds=refine_rounds,
         refine_pool=refine_pool,
+        strategies=strategies,
+        refine_patience=refine_patience,
     )
     return FleetResult(
         results=results,
@@ -1027,5 +1178,8 @@ def schedule_fleet(
         n_candidates=sum(r.n_candidates for r in results),
         n_pruned=sum(r.n_pruned for r in results),
         n_evaluated=sum(r.n_evaluated for r in results),
+        strategy_stats=portfolio_mod.merge_strategy_stats(
+            r.strategy_stats for r in results
+        ),
         **stats,
     )

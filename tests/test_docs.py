@@ -1,0 +1,64 @@
+"""Docs lane contracts: README/docs snippets import-and-run, and no
+broken intra-repo links (the same checks CI's docs job runs via
+``tools/check_docs.py``)."""
+
+import importlib.util
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def load_checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", REPO / "tools" / "check_docs.py"
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_docs_exist():
+    checker = load_checker()
+    files = {p.name for p in checker.doc_files()}
+    assert "README.md" in files
+    assert "architecture.md" in files
+    assert "benchmarks.md" in files
+
+
+def test_no_broken_intra_repo_links():
+    checker = load_checker()
+    errors = []
+    for path in checker.doc_files():
+        errors += checker.check_links(path)
+    assert not errors, "\n".join(errors)
+
+
+def test_doc_snippets_run():
+    checker = load_checker()
+    errors = []
+    for path in checker.doc_files():
+        errors += checker.check_snippets(path)
+    assert not errors, "\n".join(errors)
+
+
+def test_checker_catches_broken_link(tmp_path):
+    checker = load_checker()
+    bad = tmp_path / "bad.md"
+    bad.write_text("see [missing](no/such/file.py) and [ok](ok.md)\n")
+    (tmp_path / "ok.md").write_text("fine\n")
+    errors = checker.check_links(bad)
+    assert len(errors) == 1 and "no/such/file.py" in errors[0]
+
+
+def test_checker_catches_failing_snippet(tmp_path):
+    checker = load_checker()
+    bad = tmp_path / "bad.md"
+    bad.write_text("```python\nraise RuntimeError('boom')\n```\n")
+    errors = checker.check_snippets(bad)
+    assert len(errors) == 1 and "boom" in errors[0]
+
+
+def test_checker_cli_passes_on_repo(capsys):
+    checker = load_checker()
+    assert checker.main() == 0

@@ -1,0 +1,124 @@
+"""Docs lane: execute documentation code snippets and check intra-repo links.
+
+Checks, over ``README.md`` and ``docs/*.md``:
+
+  1. every fenced ```python block runs (blocks in one file share a
+     namespace, in order, like a doctest session);
+  2. every relative markdown link ``[text](path)`` resolves to a file or
+     directory in the repo (http/mailto/anchor links are skipped).
+
+Run from the repo root (CI's docs lane, and ``tests/test_docs.py``):
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exit code 0 iff all snippets ran and all links resolve.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:
+        return str(path)
+
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+# [text](target) — excluding images' srcs being dirs is fine; skip ![
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def doc_files() -> list[Path]:
+    docs = [REPO / "README.md"]
+    docs += sorted((REPO / "docs").glob("*.md"))
+    return [p for p in docs if p.exists()]
+
+
+def iter_code_blocks(text: str):
+    """Yield (first_line_number, language, source) for fenced blocks."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if not m:
+            i += 1
+            continue
+        lang = m.group(1).lower()
+        start = i + 1
+        j = start
+        while j < len(lines) and not lines[j].startswith("```"):
+            j += 1
+        yield start + 1, lang, "\n".join(lines[start:j])
+        i = j + 1
+
+
+def check_snippets(path: Path) -> list[str]:
+    """Run the file's python blocks in one shared namespace, in order."""
+    errors: list[str] = []
+    ns: dict = {"__name__": f"docsnippet_{path.stem}"}
+    for lineno, lang, src in iter_code_blocks(path.read_text()):
+        if lang != "python":
+            continue
+        try:
+            exec(compile(src, f"{path.name}:{lineno}", "exec"), ns)
+        except Exception:
+            errors.append(
+                f"{_rel(path)}:{lineno}: snippet failed:\n"
+                + traceback.format_exc(limit=3)
+            )
+    return errors
+
+
+def check_links(path: Path) -> list[str]:
+    errors: list[str] = []
+    text = path.read_text()
+    for lineno, line in enumerate(text.splitlines(), start=1):
+        for target in LINK_RE.findall(line):
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (path.parent / rel).exists():
+                errors.append(
+                    f"{_rel(path)}:{lineno}: broken link -> {target}"
+                )
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    if not files:
+        print("no documentation files found", file=sys.stderr)
+        return 1
+    errors: list[str] = []
+    for path in files:
+        errors += check_links(path)
+    # Links first (cheap); then snippets, which may import jax etc.
+    for path in files:
+        errors += check_snippets(path)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_py = sum(
+        1
+        for p in files
+        for _, lang, _src in iter_code_blocks(p.read_text())
+        if lang == "python"
+    )
+    print(
+        f"checked {len(files)} docs, {n_py} python snippets: "
+        + ("FAIL" if errors else "ok")
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,32 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities: CSV emission plus the machine-readable
+``BENCH_<name>.json`` trajectory record.
+
+Every ``emit`` call prints the historical ``name,us_per_call,derived``
+CSV line *and* appends a structured record to an in-process buffer;
+``write_json`` flushes the buffer as a ``BENCH`` schema document so the
+perf trajectory (wall-times, JCTs, prune rates) can be tracked across
+PRs and uploaded as a CI artifact. ``benchmarks/run.py``,
+``benchmarks/solver_scaling.py`` and ``benchmarks/online_serving.py``
+expose it via ``--json out.json``.
+"""
 
 from __future__ import annotations
 
+import argparse
+import json
 import os
+import platform
 import time
 
 import numpy as np
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+# Structured records accumulated by emit(); flushed by write_json().
+RESULTS: list[dict] = []
+
+# BENCH_<name>.json schema version (bump on breaking changes).
+BENCH_SCHEMA = "repro-bench-v1"
 
 
 def timer(fn, *args, repeats: int = 3, **kwargs):
@@ -21,5 +40,76 @@ def timer(fn, *args, repeats: int = 3, **kwargs):
     return out, best
 
 
+def _parse_derived(derived: str) -> dict:
+    """Best-effort ``k=v;k=v`` parse of a derived string (strings kept)."""
+    out: dict = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+    RESULTS.append(
+        {
+            "name": name,
+            "us_per_call": float(us_per_call),
+            "derived": derived,
+            "metrics": _parse_derived(derived),
+        }
+    )
+
+
+def reset_results() -> None:
+    RESULTS.clear()
+
+
+def bench_arg_parser(description: str | None = None) -> argparse.ArgumentParser:
+    """Parser shared by every benchmark entry point: the ``--json`` flag.
+
+    Modules add their own extra flags on the returned parser; after
+    running, pass ``args.json`` (if set) to :func:`write_json`. Keeping
+    the flag here means the BENCH CLI stays identical across
+    ``run.py`` / ``solver_scaling.py`` / ``online_serving.py``.
+    """
+    parser = argparse.ArgumentParser(description=description)
+    parser.add_argument(
+        "--json",
+        metavar="OUT.JSON",
+        default=None,
+        help="also write the machine-readable BENCH record here",
+    )
+    return parser
+
+
+def write_json(path: str, bench: str, config: dict | None = None) -> None:
+    """Flush the accumulated records as a ``BENCH_<name>.json`` document.
+
+    Schema: ``{"schema", "bench", "config", "environment", "results"}``
+    where each result is ``{"name", "us_per_call", "derived", "metrics"}``
+    (``metrics`` is the parsed key=value view of ``derived`` — wall
+    times, JCTs, prune rates, ...).
+    """
+    payload = {
+        "schema": BENCH_SCHEMA,
+        "bench": bench,
+        "config": {"full": FULL, **(config or {})},
+        "environment": {
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "numpy": np.__version__,
+        },
+        "results": list(RESULTS),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {len(RESULTS)} benchmark records -> {path}", flush=True)

@@ -1,0 +1,175 @@
+"""Online serving benchmarks: JCT and scheduler throughput under
+continuous job arrival (the paper's §V production scenario), plus the
+warm-started re-optimization comparison that backs the table in
+``docs/benchmarks.md``.
+
+  run()                — arrival-rate sweep: mean/p95 JCT, queueing delay,
+                         scheduler throughput, with bandwidth augmentation
+                         on (|K|=2) and off (|K|=0), fleet policy vs the
+                         online FIFO-solo and greedy-list baselines.
+  run_warm_vs_cold()   — warm-started vs cold-started re-optimization at
+                         equal candidate budget on the production mix
+                         (per-seed mean JCT; the docs table).
+
+Quick mode keeps each section under ~a minute on the CPU container;
+REPRO_BENCH_FULL=1 widens seeds and rates. ``--json out.json`` writes the
+machine-readable BENCH record.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FULL, emit
+from repro.online import OnlineScheduler, production_arrivals
+
+# Cluster and engine configuration shared by both sections. The engine
+# budget keeps the production-mix jobs (tasks ~ U[5,10]) in the *sampled*
+# regime (max_enumerate below the canonical counts), where search quality
+# — and therefore warm starts — matters; see docs/benchmarks.md.
+CLUSTER = dict(n_racks=6, n_wireless=2)
+SOLVER = dict(
+    max_enumerate=64,
+    n_samples=64,
+    batch_size=256,
+    refine_rounds=2,
+    refine_pool=96,
+    strategies="portfolio",
+)
+SERVICE = dict(
+    window=5.0,
+    require_full_demand=True,
+    preserve_order=True,
+    solver_kwargs=SOLVER,
+)
+
+
+def _stream(seed: int, rate: float, n_jobs: int, n_wireless: int):
+    return production_arrivals(
+        seed,
+        rate=rate,
+        n_jobs=n_jobs,
+        n_racks=CLUSTER["n_racks"],
+        n_wireless=n_wireless,
+        min_rack_demand=4,
+    )
+
+
+def run() -> None:
+    """JCT / throughput vs arrival rate, augmentation on/off, vs baselines."""
+    rates = (1 / 80, 1 / 40) if not FULL else (1 / 120, 1 / 80, 1 / 40, 1 / 25)
+    n_jobs = 8 if not FULL else 16
+    seed = 0
+    for rate in rates:
+        for n_wl, tag in ((CLUSTER["n_wireless"], "aug_on"), (0, "aug_off")):
+            evs = _stream(seed, rate, n_jobs, n_wl)
+            svc = OnlineScheduler(
+                CLUSTER["n_racks"], n_wl, warm_start=True, seed=seed, **SERVICE
+            )
+            t0 = time.perf_counter()
+            res = svc.serve(evs)
+            wall = time.perf_counter() - t0
+            emit(
+                f"online_rate{1 / rate:.0f}_{tag}",
+                1e6 * wall / n_jobs,
+                f"mean_jct={res.mean_jct:.1f};p95_jct={res.p95_jct:.1f}"
+                f";mean_queue={res.mean_queueing_delay:.1f}"
+                f";makespan={res.makespan:.1f}"
+                f";jobs_per_solver_s={res.jobs_per_solver_second:.2f}"
+                f";rack_util={res.rack_utilization:.2f}"
+                f";pruned={res.n_pruned};cands={res.n_candidates}"
+                f";epochs={res.n_epochs};batches={res.n_batches}",
+            )
+        # Online baselines at the same rate (augmentation on).
+        for policy in ("greedy_list", "fifo_solo"):
+            evs = _stream(seed, rate, n_jobs, CLUSTER["n_wireless"])
+            svc = OnlineScheduler(
+                CLUSTER["n_racks"],
+                CLUSTER["n_wireless"],
+                policy=policy,
+                seed=seed,
+                **SERVICE,
+            )
+            t0 = time.perf_counter()
+            res = svc.serve(evs)
+            wall = time.perf_counter() - t0
+            emit(
+                f"online_rate{1 / rate:.0f}_{policy}",
+                1e6 * wall / n_jobs,
+                f"mean_jct={res.mean_jct:.1f};p95_jct={res.p95_jct:.1f}"
+                f";mean_queue={res.mean_queueing_delay:.1f}"
+                f";makespan={res.makespan:.1f}",
+            )
+
+
+def run_warm_vs_cold() -> None:
+    """Warm-started vs cold-started re-optimization, equal candidate budget.
+
+    Production-scenario mix at a rate that queues most jobs (so queued
+    jobs are re-planned several times before admission). Both arms run
+    the identical service configuration and per-solve budget; the warm
+    arm additionally seeds each re-solve's sweep with the job's incumbent
+    assignments (budget-neutral: seeds displace random samples) and
+    serves a job's best simulated incumbent when a fresh re-solve fails
+    to beat it. The docs/benchmarks.md table is this function's output.
+    """
+    n_seeds = 6 if not FULL else 10
+    rate, n_jobs = 1 / 40, 10
+    rows = []
+    wins = losses = 0
+    for seed in range(n_seeds):
+        evs = _stream(seed, rate, n_jobs, CLUSTER["n_wireless"])
+        t0 = time.perf_counter()
+        warm = OnlineScheduler(
+            CLUSTER["n_racks"], CLUSTER["n_wireless"],
+            warm_start=True, seed=seed, **SERVICE,
+        ).serve(evs)
+        cold = OnlineScheduler(
+            CLUSTER["n_racks"], CLUSTER["n_wireless"],
+            warm_start=False, seed=seed, **SERVICE,
+        ).serve(evs)
+        wall = time.perf_counter() - t0
+        d = cold.mean_jct - warm.mean_jct
+        wins += d > 1e-9
+        losses += d < -1e-9
+        rows.append((seed, warm.mean_jct, cold.mean_jct, d))
+        emit(
+            f"online_warm_vs_cold_seed{seed}",
+            1e6 * wall / n_jobs,
+            f"warm_jct={warm.mean_jct:.2f};cold_jct={cold.mean_jct:.2f}"
+            f";delta={d:.2f};warm_solves={warm.n_solves}"
+            f";cold_solves={cold.n_solves}"
+            f";warm_queue={warm.mean_queueing_delay:.1f}",
+        )
+    warm_mean = float(np.mean([r[1] for r in rows]))
+    cold_mean = float(np.mean([r[2] for r in rows]))
+    emit(
+        "online_warm_vs_cold_summary",
+        0,
+        f"warm_mean_jct={warm_mean:.2f};cold_mean_jct={cold_mean:.2f}"
+        f";reduction={100 * (1 - warm_mean / cold_mean):.2f}%"
+        f";wins={wins}/{n_seeds};losses={losses}/{n_seeds}",
+    )
+
+
+def main(argv=None):
+    from benchmarks import common
+
+    parser = common.bench_arg_parser(__doc__)
+    parser.add_argument(
+        "--skip-sweep",
+        action="store_true",
+        help="run only the warm-vs-cold section",
+    )
+    args = parser.parse_args(argv)
+    if not args.skip_sweep:
+        run()
+    run_warm_vs_cold()
+    if args.json:
+        common.write_json(args.json, bench="online_serving")
+
+
+if __name__ == "__main__":
+    main()

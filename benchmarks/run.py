@@ -1,9 +1,12 @@
 """Benchmark harness: one module per paper table/figure plus framework
-benches. Prints ``name,us_per_call,derived`` CSV lines.
+benches. Prints ``name,us_per_call,derived`` CSV lines; ``--json out.json``
+additionally writes the machine-readable ``BENCH`` record (see
+``benchmarks/common.py``) so the perf trajectory is tracked across PRs.
 
   fig4_jct_vs_racks  — paper Fig. 4 (JCT vs racks, baselines ± wireless)
   fig5_gain_vs_factor — paper Fig. 5 (gain vs network factor)
   solver_scaling     — §IV-D decomposition / solver comparison
+  online_serving     — arrival-driven serving: JCT/throughput vs rate
   plan_gain          — beyond-paper scheduler->training integration
   kernel_bench       — Pallas kernels (interpret on CPU; see §Roofline for TPU)
   train_bench        — end-to-end smoke train step
@@ -17,21 +20,25 @@ import time
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from benchmarks import (
+        common,
         fig4_jct_vs_racks,
         fig5_gain_vs_factor,
         kernel_bench,
+        online_serving,
         plan_gain,
         solver_scaling,
         train_bench,
     )
 
+    args = common.bench_arg_parser(__doc__).parse_args(argv)
     print("name,us_per_call,derived")
     for mod in (
         fig4_jct_vs_racks,
         fig5_gain_vs_factor,
         solver_scaling,
+        online_serving,
         plan_gain,
         kernel_bench,
         train_bench,
@@ -39,13 +46,16 @@ def main() -> None:
         t0 = time.perf_counter()
         try:
             mod.run()
-            print(
-                f"_section_{mod.__name__.split('.')[-1]},"
-                f"{1e6 * (time.perf_counter() - t0):.0f},ok"
+            common.emit(
+                f"_section_{mod.__name__.split('.')[-1]}",
+                1e6 * (time.perf_counter() - t0),
+                "ok",
             )
         except Exception:  # noqa: BLE001 — keep the harness running
             traceback.print_exc()
-            print(f"_section_{mod.__name__.split('.')[-1]},0,FAILED")
+            common.emit(f"_section_{mod.__name__.split('.')[-1]}", 0, "FAILED")
+    if args.json:
+        common.write_json(args.json, bench="all")
 
 
 if __name__ == "__main__":

@@ -185,11 +185,16 @@ def run_portfolio_refinement():
     )
 
 
-def main():
+def main(argv=None):
+    from benchmarks import common
+
+    args = common.bench_arg_parser(__doc__).parse_args(argv)
     run()
     run_sampled_throughput()
     run_fleet_megabatch()
     run_portfolio_refinement()
+    if args.json:
+        common.write_json(args.json, bench="solver_scaling")
 
 
 if __name__ == "__main__":

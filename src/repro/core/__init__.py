@@ -56,8 +56,11 @@ from repro.core.portfolio import (
 )
 from repro.core.baselines import (
     BASELINES,
+    ONLINE_BASELINES,
+    fifo_solo_schedule,
     g_list_master_schedule,
     g_list_schedule,
+    greedy_list_online_schedule,
     list_schedule,
     partition_schedule,
     random_schedule,
@@ -82,7 +85,8 @@ __all__ = [
     "DEFAULT_PORTFOLIO", "AnnealingStrategy", "CrossoverStrategy",
     "MutationStrategy", "Portfolio", "Strategy", "StrategyStats",
     "build_strategies",
-    "BASELINES", "g_list_master_schedule", "g_list_schedule", "list_schedule",
-    "partition_schedule", "random_schedule", "single_rack_schedule",
-    "wired_only",
+    "BASELINES", "ONLINE_BASELINES", "fifo_solo_schedule",
+    "g_list_master_schedule", "g_list_schedule", "greedy_list_online_schedule",
+    "list_schedule", "partition_schedule", "random_schedule",
+    "single_rack_schedule", "wired_only",
 ]

@@ -40,8 +40,11 @@ __all__ = [
     "partition_schedule",
     "g_list_schedule",
     "g_list_master_schedule",
+    "fifo_solo_schedule",
+    "greedy_list_online_schedule",
     "wired_only",
     "BASELINES",
+    "ONLINE_BASELINES",
 ]
 
 
@@ -241,4 +244,49 @@ BASELINES = {
     "partition": partition_schedule,
     "g_list": g_list_schedule,
     "g_list_master": g_list_master_schedule,
+}
+
+
+# ---------------------------------------------------------------------------
+# Online (arrival-driven) baselines
+# ---------------------------------------------------------------------------
+#
+# The online serving layer (:mod:`repro.online.service`) schedules each
+# admitted job with a per-job policy function ``(inst, use_wireless) ->
+# Schedule``. The two entries below are the classic online comparison
+# points for the arrival-driven benchmarks; ``"fleet"`` (the mega-batch
+# search engine with warm-started re-optimization) is the policy under
+# test and lives in the service itself.
+
+
+def fifo_solo_schedule(inst: ProblemInstance, use_wireless: bool = True) -> Schedule:
+    """Per-job scheduler of the online *FIFO-solo* baseline.
+
+    FIFO-solo serves jobs strictly one at a time in arrival order, each
+    getting the whole cluster to itself (the service enforces the solo
+    admission rule — whole cluster idle, head-of-line job only); the
+    per-job schedule is ETF list scheduling executed under real
+    contention. JCT is then dominated by head-of-line queueing, which is
+    what the batched fleet policy is measured against.
+    """
+    return list_schedule(inst, use_wireless=use_wireless)
+
+
+def greedy_list_online_schedule(
+    inst: ProblemInstance, use_wireless: bool = True
+) -> Schedule:
+    """Per-job scheduler of the online *greedy-list* baseline.
+
+    Greedy-list admits jobs onto residual capacity exactly like the fleet
+    policy (same windows, same residual instances) but places each job
+    with the contention-aware G-List heuristic instead of searching — no
+    candidate batches, no warm starts. It isolates the value of the
+    search engine from the value of the admission machinery.
+    """
+    return g_list_schedule(inst, use_wireless=use_wireless)
+
+
+ONLINE_BASELINES = {
+    "fifo_solo": fifo_solo_schedule,
+    "greedy_list": greedy_list_online_schedule,
 }

@@ -452,6 +452,12 @@ class Portfolio:
          converts credits to yields (improvement per evaluated candidate),
          and updates weights ``w *= exp(eta * yield / max_yield)``
          (multiplicative weights), clipped to keep every strategy alive.
+         With ``yield_decay`` > 0 the update signal is a geometrically
+         decayed running yield (``acc = yield_decay * acc + yield``) so a
+         strategy's past rounds keep a fading vote; the update only fires
+         on rounds whose *current* yields are non-zero (stalled rounds
+         never re-apply stale evidence). The 0.0 default is memoryless
+         and reproduces the plain update bit for bit.
 
     Determinism: weight arithmetic is pure float; the only randomness is
     the strategies' draws from the shared per-instance generator, in fixed
@@ -470,6 +476,7 @@ class Portfolio:
         eta: float = 2.0,
         min_share: float = 0.10,
         elite_capacity: int = 16,
+        yield_decay: float = 0.0,
     ):
         self.strategies = list(strategies)
         if not self.strategies:
@@ -479,9 +486,13 @@ class Portfolio:
         self.pool_size = int(pool_size)
         self.eta = float(eta)
         self.min_share = float(min_share)
+        self.yield_decay = float(yield_decay)
+        if not 0.0 <= self.yield_decay < 1.0:
+            raise ValueError("yield_decay must be in [0, 1)")
         self.elites = ElitePool(elite_capacity)
         k = len(self.strategies)
         self.weights = np.ones(k, dtype=np.float64)
+        self._yield_acc = np.zeros(k, dtype=np.float64)
         self.stats = {s.name: StrategyStats() for s in self.strategies}
         self.round_index = 0
         self._view: SearchView | None = None
@@ -591,9 +602,20 @@ class Portfolio:
             0.0,
         )
         yields = credits / np.maximum(self._round_eval, 1)
-        top = float(yields.max())
-        if top > 0.0 and len(self.strategies) > 1:
-            self.weights *= np.exp(self.eta * yields / top)
+        # Allocator signal: the current round's yields, plus (with
+        # ``yield_decay`` > 0) a geometrically decayed memory of past
+        # rounds' yields — stale evidence keeps a fading vote in how a
+        # productive round's budget shift is apportioned. The update
+        # itself stays gated on the *current* round producing yield
+        # (``yields.max() > 0``): a stalled round must never re-apply old
+        # evidence, or one early lucky round would pin the weights at the
+        # clip extremes. The default 0.0 contributes exact zeros,
+        # reproducing the memoryless multiplicative-weights update bit
+        # for bit.
+        self._yield_acc = self.yield_decay * self._yield_acc + yields
+        if float(yields.max()) > 0.0 and len(self.strategies) > 1:
+            signal = self._yield_acc
+            self.weights *= np.exp(self.eta * signal / float(signal.max()))
             self.weights = np.clip(self.weights / self.weights.mean(), 0.05, 20.0)
         for s_idx, strat in enumerate(self.strategies):
             st = self.stats[strat.name]

@@ -674,6 +674,7 @@ class _InstanceState:
         strategies=None,
         refine_pool: int = 1024,
         patience: int = 1,
+        seed_pool: np.ndarray | None = None,
     ):
         self.idx = idx
         self.inst = inst
@@ -685,13 +686,23 @@ class _InstanceState:
         self.sampled = cands.shape[0] > max_enumerate
         if self.sampled:
             rng = np.random.default_rng(seed)
-            cands = np.concatenate(
-                [
-                    enumerate_assignments(self.n, min(2, M), limit=n_samples),
-                    sample_assignments(rng, self.n, M, n_samples),
-                ],
-                axis=0,
-            )
+            # Warm-start seed pool: known-good assignments (e.g. incumbents
+            # of a previous solve of the same job) lead the sweep so the
+            # incumbent — and with it stage-1 pruning — is strong from the
+            # first block. Budget-neutral: each seed row displaces one
+            # random sample, so warm and cold runs consider the same
+            # number of candidates (the random rows are drawn identically
+            # and truncated, keeping the RNG stream comparable).
+            random_rows = sample_assignments(rng, self.n, M, n_samples)
+            parts = [
+                enumerate_assignments(self.n, min(2, M), limit=n_samples),
+                random_rows,
+            ]
+            if seed_pool is not None and len(seed_pool):
+                seeds = np.asarray(seed_pool, dtype=np.int32).reshape(-1, self.n)
+                seeds = (seeds % M)[:n_samples].astype(np.int32)
+                parts = [seeds] + parts[:1] + [random_rows[: n_samples - seeds.shape[0]]]
+            cands = np.concatenate(parts, axis=0)
         self.cands = cands
         self.pos = 0
         self.buffer: list[np.ndarray] = []
@@ -815,6 +826,7 @@ def _run_fleet(
     refine_pool: int,
     strategies=None,
     refine_patience: int | None = None,
+    seed_pools=None,
 ):
     """Lockstep fleet driver: one mega-batch launch geometry per stage.
 
@@ -843,6 +855,8 @@ def _run_fleet(
     # portfolios a few stalled rounds so annealing can tunnel.
     if refine_patience is None:
         refine_patience = 1 if portfolio_mod.spec_length(strategies) == 1 else 3
+    if seed_pools is None:
+        seed_pools = [None] * I
     states = [
         _InstanceState(
             i,
@@ -854,6 +868,7 @@ def _run_fleet(
             strategies=strategies,
             refine_pool=refine_pool,
             patience=refine_patience,
+            seed_pool=seed_pools[i],
         )
         for i, inst in enumerate(instances)
     ]
@@ -1026,6 +1041,7 @@ def vectorized_search(
     contention: bool = True,
     strategies=None,
     refine_patience: int | None = None,
+    seed_pool: np.ndarray | None = None,
 ) -> VectorizedResult:
     """Best-of-batch schedule search with bound-driven pruning.
 
@@ -1071,6 +1087,16 @@ def vectorized_search(
       refine_patience: stop refining after this many consecutive
         non-improving rounds. ``None`` => 1 for a single strategy (the
         pre-portfolio rule), 3 for a multi-strategy portfolio.
+      seed_pool: optional int[S, n_tasks] warm-start assignments (e.g.
+        incumbents from a previous solve of the same job) injected at the
+        head of the sampled-regime sweep. Budget-neutral: each seed
+        displaces one random sample, so ``n_candidates`` is unchanged.
+        Labels are folded into ``[0, n_racks)`` with a modulo, letting
+        incumbents from a differently-sized resource view seed a residual
+        re-solve. Ignored in the exhaustive-enumeration regime (the sweep
+        already covers every canonical assignment). Scored seeds enter
+        the refinement portfolio's elite pool like any sweep candidate,
+        so crossover can recombine them from round one.
 
     Returns:
       :class:`VectorizedResult` (per-strategy refinement counters in
@@ -1090,6 +1116,7 @@ def vectorized_search(
         refine_pool=refine_pool,
         strategies=strategies,
         refine_patience=refine_patience,
+        seed_pools=[seed_pool],
     )
     return results[0]
 
@@ -1108,6 +1135,7 @@ def schedule_fleet(
     contention: bool = True,
     strategies=None,
     refine_patience: int | None = None,
+    seed_pools=None,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of instances in one padded mega-batch.
 
@@ -1127,6 +1155,10 @@ def schedule_fleet(
         names (e.g. ``"portfolio"`` or ``("mutation", "crossover")``) or
         zero-arg factories — live Strategy objects would alias state
         across the fleet and are rejected for fleets of more than one.
+      seed_pools: ``None``, or one warm-start pool per instance (each
+        ``None`` or int[S, n_tasks]; see ``seed_pool`` on
+        :func:`vectorized_search`). The online serving layer uses this to
+        re-optimize still-queued jobs from their incumbent assignments.
       (remaining arguments: see :func:`vectorized_search`.)
 
     Determinism / solo equivalence: with the same seed and parameters,
@@ -1157,6 +1189,8 @@ def schedule_fleet(
         seeds = [int(s) for s in seed]
         if len(seeds) != len(instances):
             raise ValueError("one seed per instance required")
+    if seed_pools is not None and len(seed_pools) != len(instances):
+        raise ValueError("one seed pool (or None) per instance required")
     results, stats = _run_fleet(
         instances,
         max_enumerate=max_enumerate,
@@ -1171,6 +1205,7 @@ def schedule_fleet(
         refine_pool=refine_pool,
         strategies=strategies,
         refine_patience=refine_patience,
+        seed_pools=seed_pools,
     )
     return FleetResult(
         results=results,

@@ -1,0 +1,35 @@
+"""Online arrival-driven scheduling service (beyond-paper).
+
+Turns the offline mega-batch engine into a serving system for the paper's
+production scenario (§V): jobs arrive over time, queue for residual
+cluster capacity, and are (re-)optimized in windowed ``schedule_fleet``
+mega-batches with warm-started search. Layers:
+
+  workload  — seeded Poisson / production-mix / trace arrival generators
+  cluster   — global cluster timeline and residual-capacity instances
+  service   — admission event loop + warm-started re-optimization
+  metrics   — per-job queueing/JCT records and aggregate OnlineResult
+"""
+
+from repro.online.cluster import ClusterTimeline, ResidualView
+from repro.online.metrics import JobMetrics, OnlineResult
+from repro.online.service import DEFAULT_SOLVER_KWARGS, OnlineScheduler
+from repro.online.workload import (
+    ArrivalEvent,
+    poisson_arrivals,
+    production_arrivals,
+    trace_arrivals,
+)
+
+__all__ = [
+    "ArrivalEvent",
+    "ClusterTimeline",
+    "DEFAULT_SOLVER_KWARGS",
+    "JobMetrics",
+    "OnlineResult",
+    "OnlineScheduler",
+    "ResidualView",
+    "poisson_arrivals",
+    "production_arrivals",
+    "trace_arrivals",
+]

@@ -1,0 +1,196 @@
+"""Global cluster timeline: residual capacity for arrival-driven admission.
+
+The offline engine solves each :class:`~repro.core.instance.ProblemInstance`
+against a *private* resource view (its own racks and subchannels). Online,
+admitted jobs occupy the shared cluster over time, so a newly arrived job
+must be solved against what is actually free. :class:`ClusterTimeline`
+tracks, per physical rack and per physical channel (the wired channel plus
+each wireless subchannel), the time until which the resource is held by
+committed jobs, and constructs **residual-capacity instances**: the same
+DAG, but with ``n_racks`` / ``n_wireless`` clamped to the resources free
+at the admission epoch, together with the local->physical maps needed to
+commit the resulting schedule back onto the shared timeline.
+
+Occupancy model: **racks are exclusive** — jobs admitted at the same
+epoch draw disjoint rack grants from a shrinking pool (the service passes
+``rack_pool``), and a committed job holds each granted rack it uses until
+its last task there finishes. **Wireless subchannels are gated across
+epochs** by their hold times (a held subchannel is excluded from later
+residual views) but shared by the jobs of one epoch. **The wired channel
+is never gated**: every job needs it, so it is contended only *within*
+each job's own schedule (the fleet model of
+:func:`repro.core.vectorized.schedule_fleet`, which solves co-admitted
+jobs as independent instances) — cross-job wired contention, at any
+epoch distance, is the model's deliberate approximation, and the
+reported wired utilization is the sum of per-job busy times (it can
+exceed 1 under overlap). With an empty cluster, one admission
+epoch, and total rack demand within the cluster, every job is granted
+exactly its demanded shape, so the online service reduces bit-for-bit to
+one ``schedule_fleet`` call (locked by ``tests/test_online.py::
+test_degenerate_arrivals_match_schedule_fleet``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.instance import CH_WIRED, ProblemInstance
+from repro.core.schedule import Schedule
+
+__all__ = ["ClusterTimeline", "ResidualView"]
+
+# Tolerance for "free at t" comparisons on float timelines.
+_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualView:
+    """A job's residual-capacity view of the cluster at one epoch.
+
+    Attributes:
+      inst: the residual instance — the job's DAG with ``n_racks`` =
+        granted racks and ``n_wireless`` = free subchannels (0 when all
+        are held: the job runs wired-only).
+      rack_map: int[granted] physical rack id of each local rack index.
+      wireless_map: int[free_wireless] physical subchannel index (0-based)
+        of each local subchannel index.
+      full: True iff the view grants the job's full demanded shape.
+    """
+
+    inst: ProblemInstance
+    rack_map: np.ndarray
+    wireless_map: np.ndarray
+    full: bool
+
+
+class ClusterTimeline:
+    """Hold-until-free occupancy of one cluster's racks and channels.
+
+    Args:
+      n_racks: M physical racks.
+      n_wireless: |K| physical wireless subchannels.
+    """
+
+    def __init__(self, n_racks: int, n_wireless: int):
+        if n_racks < 1:
+            raise ValueError("cluster needs at least one rack")
+        if n_wireless < 0:
+            raise ValueError("n_wireless must be non-negative")
+        self.n_racks = int(n_racks)
+        self.n_wireless = int(n_wireless)
+        self.rack_hold = np.zeros(self.n_racks, dtype=np.float64)
+        self.wireless_hold = np.zeros(self.n_wireless, dtype=np.float64)
+        # Busy-time accumulators for utilization metrics.
+        self.rack_busy_time = 0.0
+        self.wired_busy_time = 0.0
+        self.wireless_busy_time = 0.0
+        self.last_completion = 0.0
+
+    # -- residual capacity ---------------------------------------------------
+
+    def free_racks(self, t: float) -> np.ndarray:
+        """Physical rack ids free at time ``t`` (ascending)."""
+        return np.nonzero(self.rack_hold <= t + _EPS)[0]
+
+    def free_wireless(self, t: float) -> np.ndarray:
+        """Physical wireless subchannel indices free at time ``t``."""
+        return np.nonzero(self.wireless_hold <= t + _EPS)[0]
+
+    def residual_view(
+        self,
+        inst: ProblemInstance,
+        t: float,
+        rack_pool: np.ndarray | None = None,
+    ) -> ResidualView | None:
+        """Residual-capacity instance for ``inst`` at epoch ``t``.
+
+        Grants ``min(inst.n_racks, |pool|)`` racks — the lowest-id entries
+        of ``rack_pool``, or of the free set at ``t`` when no pool is
+        given (the service passes a shrinking pool so racks granted within
+        one epoch are mutually exclusive) — and every free wireless
+        subchannel up to the job's demand (subchannels are shared by jobs
+        of one epoch, like the wired channel; only cross-epoch holds gate
+        them). Returns ``None`` when the pool is empty — the job cannot
+        be admitted at this epoch.
+        """
+        free_r = self.free_racks(t) if rack_pool is None else np.asarray(rack_pool)
+        if free_r.size == 0:
+            return None
+        granted = free_r[: inst.n_racks]
+        free_w = self.free_wireless(t)[: inst.n_wireless]
+        residual = ProblemInstance(
+            job=inst.job,
+            n_racks=int(granted.size),
+            n_wireless=int(free_w.size),
+            wired_rate=inst.wired_rate,
+            wireless_rate=inst.wireless_rate,
+            local_delay=inst.local_delay,
+        )
+        full = granted.size == inst.n_racks and free_w.size == inst.n_wireless
+        return ResidualView(
+            inst=residual,
+            rack_map=granted.astype(np.int64),
+            wireless_map=free_w.astype(np.int64),
+            full=bool(full),
+        )
+
+    # -- commit --------------------------------------------------------------
+
+    def commit(self, view: ResidualView, sched: Schedule, t: float) -> float:
+        """Place ``sched`` (solved in the residual view's local frame,
+        relative time 0) onto the cluster starting at absolute time ``t``.
+
+        Each rack the job uses is held until the job's last task on it
+        finishes, and each used wireless subchannel until the job's last
+        transfer on it finishes; wired-channel usage only accumulates
+        busy time (it never gates admission — see the module docstring).
+        Returns the job's absolute completion time (``t + makespan``).
+        """
+        inst = view.inst
+        job = inst.job
+        dur = inst.duration_on(sched.chan)
+        for i in range(inst.n_racks):
+            on_i = sched.rack == i
+            if not on_i.any():
+                continue
+            fin = float(np.max(sched.start[on_i] + job.p[on_i]))
+            phys = int(view.rack_map[i])
+            self.rack_hold[phys] = max(self.rack_hold[phys], t + fin)
+            self.rack_busy_time += float(np.sum(job.p[on_i]))
+        if job.n_edges:
+            wired = sched.chan == CH_WIRED
+            if wired.any():
+                self.wired_busy_time += float(np.sum(dur[wired]))
+            for k in range(inst.n_wireless):
+                on_k = sched.chan == 2 + k
+                if not on_k.any():
+                    continue
+                fin = float(np.max(sched.tstart[on_k] + dur[on_k]))
+                phys = int(view.wireless_map[k])
+                self.wireless_hold[phys] = max(self.wireless_hold[phys], t + fin)
+                self.wireless_busy_time += float(np.sum(dur[on_k]))
+        completion = t + sched.makespan
+        self.last_completion = max(self.last_completion, completion)
+        return completion
+
+    # -- metrics -------------------------------------------------------------
+
+    def utilization(self, horizon: float) -> dict[str, float]:
+        """Busy-time fractions over ``[0, horizon]``. Rack and wireless
+        figures are exact under their exclusivity rules; the wired figure
+        sums per-job busy times and can exceed 1 when concurrent jobs'
+        wired transfers overlap (see the module docstring)."""
+        if horizon <= 0.0:
+            return {"rack": 0.0, "wired": 0.0, "wireless": 0.0}
+        return {
+            "rack": self.rack_busy_time / (self.n_racks * horizon),
+            "wired": self.wired_busy_time / horizon,
+            "wireless": (
+                self.wireless_busy_time / (self.n_wireless * horizon)
+                if self.n_wireless
+                else 0.0
+            ),
+        }
+

@@ -1,0 +1,395 @@
+"""Arrival-driven scheduling service: admission event loop over the fleet
+engine with warm-started re-optimization.
+
+The event loop turns the offline mega-batch engine
+(:func:`repro.core.vectorized.schedule_fleet`) into a serving system:
+
+  1. **Windowed admission.** Arrivals are batched into admission epochs —
+     the first unserved arrival opens a window of length ``window``; every
+     job arriving inside it joins the epoch's batch. All jobs of one epoch
+     are solved in ONE ``schedule_fleet`` mega-batch launch, so the
+     lockstep driver and the fused §IV-A stage-1 pruner are shared across
+     the batch and compiled programs are reused across epochs (fleets in
+     the same size bucket retrace nothing).
+  2. **Residual capacity.** Each job is solved against the cluster's
+     residual view at the epoch (:class:`repro.online.cluster
+     .ClusterTimeline`): the racks and wireless subchannels not held by
+     previously committed jobs. Committed schedules hold their resources
+     until their last use, and completions wake the loop to admit queued
+     work.
+  3. **Warm-started re-optimization.** A job that cannot be admitted
+     (no free rack, or fewer than ``min_free_racks``) stays queued, but is
+     still *planned* in the epoch's mega-batch against its full demanded
+     shape. With ``warm_start=True`` each planning solve (and the eventual
+     admission solve) seeds the engine's sweep with the job's incumbent
+     assignments via the ``seed_pools`` hook — budget-neutral (seeds
+     displace an equal number of random samples), so warm vs cold is an
+     equal-candidate-budget comparison, and since seeds are themselves
+     evaluated, a warm re-solve can never return a worse assignment than
+     its own incumbent's greedy score.
+
+Determinism: with a fixed ``seed`` and a fixed arrival stream the service
+is bit-reproducible. Engine seeds follow a common-random-numbers
+discipline (the standard variance-reduction tool for comparing policies
+on one trace): a job's *admission* solve always uses
+``seed + 1009 * job_id``, while *planning* re-solves of a queued job add
+``9173 * n_prior_solves`` so each re-optimization explores fresh samples.
+Consequence: a cold-start arm's committed result for job ``j`` is the
+deterministic unseeded solve ``R_j`` (its admission solve ignores queue
+history), and a warm arm's chain *starts* at exactly ``R_j`` (the first
+solve has no incumbents yet and shares its seed) — so keep-incumbent
+re-optimization makes the warm arm's committed makespan provably <= the
+cold arm's for every job whose admitted shape matches its planning shape
+(e.g. under ``require_full_demand``).
+
+Degenerate reduction (locked by ``tests/test_online.py``): with every job
+arriving at t=0, ``window=0`` and an empty cluster, the single epoch's
+batch is exactly a direct ``schedule_fleet`` call — per-job assignments
+and JCTs are bit-for-bit identical.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time as _time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.baselines import ONLINE_BASELINES
+from repro.core.schedule import Schedule
+from repro.core.vectorized import schedule_fleet
+from repro.online.cluster import ClusterTimeline, ResidualView
+from repro.online.metrics import JobMetrics, OnlineResult
+from repro.online.workload import ArrivalEvent
+
+__all__ = ["OnlineScheduler", "DEFAULT_SOLVER_KWARGS"]
+
+_EPS = 1e-9
+
+# Engine budget per epoch solve. Deliberately lighter than the offline
+# defaults: a serving epoch re-optimizes often, so per-solve budget trades
+# against responsiveness. Benchmarks override freely.
+DEFAULT_SOLVER_KWARGS = dict(
+    max_enumerate=2_000,
+    n_samples=512,
+    batch_size=512,
+    refine_rounds=2,
+    refine_pool=256,
+)
+
+
+@dataclasses.dataclass
+class _PendingJob:
+    """Queue entry: one arrived, not-yet-admitted job."""
+
+    event: ArrivalEvent
+    n_solves: int = 0
+    # Distinct incumbent assignments from prior solves, best-first
+    # (labels in the shape of the solve that produced them; the seed-pool
+    # hook folds them into the residual shape with a modulo).
+    incumbents: list[np.ndarray] = dataclasses.field(default_factory=list)
+    # Best *simulated* schedule over the job's solve chain, with the
+    # resource shape it was solved for: a warm admission commits this
+    # incumbent schedule when the fresh re-solve fails to beat it (and
+    # the admitted shape matches), making the served makespan monotone
+    # over re-optimizations.
+    best_sched: Schedule | None = None
+    best_makespan: float = np.inf
+    best_shape: tuple[int, int] | None = None
+
+    def remember(self, res, shape: tuple[int, int], cap: int) -> None:
+        assignment = np.asarray(res.best_assignment, dtype=np.int64)
+        key = assignment.tobytes()
+        self.incumbents = [a for a in self.incumbents if a.tobytes() != key]
+        self.incumbents.insert(0, assignment.copy())
+        del self.incumbents[cap:]
+        # A shape change invalidates the stored schedule (it was feasible
+        # only for the old resource view); same-shape solves keep the min.
+        if shape != self.best_shape or res.makespan < self.best_makespan:
+            self.best_sched = res.schedule
+            self.best_makespan = float(res.makespan)
+            self.best_shape = shape
+
+
+class OnlineScheduler:
+    """Serve an arrival stream on one cluster.
+
+    Args:
+      n_racks: physical racks in the cluster.
+      n_wireless: physical wireless subchannels (0 = wired-only cluster,
+        i.e. bandwidth augmentation off).
+      window: admission window length — arrivals within ``window`` of the
+        epoch-opening arrival are batched into one mega-batch solve.
+        ``0.0`` gives every arrival instant its own epoch.
+      policy: ``"fleet"`` (the mega-batch search engine, default) or an
+        online baseline name from
+        :data:`repro.core.baselines.ONLINE_BASELINES` (``"fifo_solo"``
+        serves one job at a time on the idle cluster; ``"greedy_list"``
+        admits on residual capacity but places jobs with the G-List
+        heuristic instead of searching).
+      warm_start: seed each queued job's re-solve (and its admission
+        solve) with its incumbent assignments. Fleet policy only.
+      min_free_racks: admit only when at least this many racks are free;
+        queued jobs below the threshold are planned, not placed.
+      require_full_demand: admit a job only when its full demanded shape
+        (``inst.n_racks`` racks and ``inst.n_wireless`` subchannels) is
+        free, instead of running degraded on a smaller residual. Queued
+        jobs wait (and keep re-planning) until capacity frees up; because
+        the planning shape then equals the admission shape, warm-start
+        incumbents transfer exactly.
+      preserve_order: admit strictly in arrival order — the first queued
+        job that does not fit blocks everything behind it (head-of-line
+        FIFO, no overtaking). Keeps service trajectories stable under
+        small makespan perturbations, at the cost of some utilization.
+      seed: master seed for the per-solve engine seeds (see module
+        docstring for the exact derivation).
+      seed_pool_size: incumbents remembered per queued job.
+      solver_kwargs: overrides merged over :data:`DEFAULT_SOLVER_KWARGS`
+        and passed to :func:`repro.core.vectorized.schedule_fleet`.
+    """
+
+    def __init__(
+        self,
+        n_racks: int,
+        n_wireless: int,
+        *,
+        window: float = 0.0,
+        policy: str = "fleet",
+        warm_start: bool = True,
+        min_free_racks: int = 1,
+        require_full_demand: bool = False,
+        preserve_order: bool = False,
+        seed: int = 0,
+        seed_pool_size: int = 4,
+        solver_kwargs: dict | None = None,
+    ):
+        if policy != "fleet" and policy not in ONLINE_BASELINES:
+            raise ValueError(
+                f"unknown policy {policy!r}; "
+                f"choose 'fleet' or one of {sorted(ONLINE_BASELINES)}"
+            )
+        if window < 0.0:
+            raise ValueError("window must be non-negative")
+        if not 1 <= min_free_racks <= n_racks:
+            raise ValueError("min_free_racks must be in [1, n_racks]")
+        self.n_racks = int(n_racks)
+        self.n_wireless = int(n_wireless)
+        self.window = float(window)
+        self.policy = policy
+        self.warm_start = bool(warm_start)
+        self.min_free_racks = int(min_free_racks)
+        self.require_full_demand = bool(require_full_demand)
+        self.preserve_order = bool(preserve_order)
+        self.seed = int(seed)
+        self.seed_pool_size = int(seed_pool_size)
+        self.solver_kwargs = dict(DEFAULT_SOLVER_KWARGS)
+        if solver_kwargs:
+            self.solver_kwargs.update(solver_kwargs)
+
+    # -- public API ----------------------------------------------------------
+
+    def serve(self, arrivals: Sequence[ArrivalEvent]) -> OnlineResult:
+        """Run the event loop over ``arrivals`` until every job completes."""
+        arrivals = sorted(arrivals, key=lambda e: (e.time, e.job_id))
+        cluster = ClusterTimeline(self.n_racks, self.n_wireless)
+        pending: list[_PendingJob] = []
+        completions: list[float] = []  # heap of outstanding completion times
+        records: list[JobMetrics] = []
+        counters = {
+            "epochs": 0, "batches": 0, "solves": 0,
+            "candidates": 0, "pruned": 0, "wall": 0.0,
+        }
+
+        i = 0
+        while i < len(arrivals) or pending:
+            t_arr = arrivals[i].time + self.window if i < len(arrivals) else np.inf
+            t_cmp = completions[0] if (pending and completions) else np.inf
+            t = min(t_arr, t_cmp) if pending else t_arr
+            if not np.isfinite(t):
+                raise RuntimeError(
+                    "online event loop deadlocked: jobs queued with no "
+                    "outstanding completion or arrival to wake on"
+                )
+            while i < len(arrivals) and arrivals[i].time <= t + _EPS:
+                pending.append(_PendingJob(arrivals[i]))
+                i += 1
+            while completions and completions[0] <= t + _EPS:
+                heapq.heappop(completions)
+            counters["epochs"] += 1
+            admitted = self._process_epoch(
+                t, pending, cluster, records, counters
+            )
+            for comp in admitted:
+                heapq.heappush(completions, comp)
+
+        records.sort(key=lambda r: r.job_id)
+        horizon = cluster.last_completion
+        util = cluster.utilization(horizon)
+        return OnlineResult(
+            jobs=records,
+            policy=self.policy,
+            warm_start=self.warm_start and self.policy == "fleet",
+            n_epochs=counters["epochs"],
+            n_batches=counters["batches"],
+            n_solves=counters["solves"],
+            n_candidates=counters["candidates"],
+            n_pruned=counters["pruned"],
+            solver_wall=counters["wall"],
+            horizon=horizon,
+            rack_utilization=util["rack"],
+            wired_utilization=util["wired"],
+            wireless_utilization=util["wireless"],
+        )
+
+    # -- epoch processing ----------------------------------------------------
+
+    def _engine_seed(self, job: _PendingJob, planning: bool) -> int:
+        base = self.seed + 1009 * job.event.job_id
+        return base + 9173 * job.n_solves if planning else base
+
+    def _admissible(self, cluster: ClusterTimeline, t: float) -> bool:
+        return cluster.free_racks(t).size >= self.min_free_racks
+
+    def _process_epoch(
+        self,
+        t: float,
+        pending: list[_PendingJob],
+        cluster: ClusterTimeline,
+        records: list[JobMetrics],
+        counters: dict,
+    ) -> list[float]:
+        """Admit / plan the queue at epoch ``t``; returns new completions."""
+        if not pending:
+            return []
+        if self.policy == "fifo_solo":
+            # Solo rule: head-of-line job only, and only on a fully idle
+            # cluster (every rack free implies every channel free too —
+            # channel holds never outlast the rack hold of the consumer).
+            if cluster.free_racks(t).size < self.n_racks:
+                return []
+            admit, plan = pending[:1], []
+            views = [cluster.residual_view(admit[0].event.inst, t)]
+        else:
+            # Racks granted within one epoch are mutually exclusive:
+            # each admitted job consumes its grant from a shrinking pool,
+            # so later jobs of the epoch see only what is left. Wireless
+            # subchannels are shared within the epoch (cross-job channel
+            # contention is the fleet model's approximation) and gated
+            # only by cross-epoch holds.
+            pool = cluster.free_racks(t)
+            n_free_w = cluster.free_wireless(t).size
+            admit, plan, views = [], [], []
+            for p in pending:
+                ok = pool.size >= self.min_free_racks
+                if ok and self.require_full_demand:
+                    # Demands are clamped to the cluster shape so an
+                    # oversized job can still (eventually) be admitted.
+                    ok = (
+                        pool.size >= min(p.event.inst.n_racks, self.n_racks)
+                        and n_free_w
+                        >= min(p.event.inst.n_wireless, self.n_wireless)
+                    )
+                if self.preserve_order and plan:
+                    ok = False  # head-of-line blocking: no overtaking
+                if ok:
+                    view = cluster.residual_view(p.event.inst, t, rack_pool=pool)
+                    pool = pool[view.inst.n_racks :]
+                    admit.append(p)
+                    views.append(view)
+                else:
+                    plan.append(p)
+        assert all(v is not None for v in views)
+
+        new_completions: list[float] = []
+        if self.policy == "fleet":
+            # Queued ("plan") jobs are re-solved every epoch in BOTH warm
+            # and cold modes: cold-start re-optimization means searching
+            # from scratch each epoch, and running its (discarded)
+            # planning solves keeps warm-vs-cold an equal-total-budget
+            # comparison — the benchmarks' warm_solves == cold_solves
+            # records rest on this. Cold planning never changes a
+            # committed schedule (admission solves ignore history), only
+            # solver_wall/n_solves.
+            batch = admit + plan
+            if not batch:
+                return []
+            instances = [v.inst for v in views] + [p.event.inst for p in plan]
+            seeds = [self._engine_seed(p, planning=False) for p in admit] + [
+                self._engine_seed(p, planning=True) for p in plan
+            ]
+            seed_pools = None
+            if self.warm_start:
+                seed_pools = [
+                    np.stack(p.incumbents, axis=0) if p.incumbents else None
+                    for p in batch
+                ]
+            t0 = _time.perf_counter()
+            fleet = schedule_fleet(
+                instances, seed=seeds, seed_pools=seed_pools, **self.solver_kwargs
+            )
+            counters["wall"] += _time.perf_counter() - t0
+            counters["batches"] += 1
+            counters["solves"] += len(batch)
+            counters["candidates"] += fleet.n_candidates
+            counters["pruned"] += fleet.n_pruned
+            for p, inst, res in zip(batch, instances, fleet.results):
+                p.n_solves += 1
+                p.remember(
+                    res, (inst.n_racks, inst.n_wireless), self.seed_pool_size
+                )
+            for p, view, res in zip(admit, views, fleet.results):
+                sched, mk = res.schedule, res.makespan
+                if (
+                    self.warm_start
+                    and p.best_makespan < mk
+                    and p.best_shape
+                    == (view.inst.n_racks, view.inst.n_wireless)
+                ):
+                    # Keep-incumbent re-optimization: the fresh solve did
+                    # not beat the chain's best simulated schedule for
+                    # this exact resource shape, so serve the incumbent.
+                    sched, mk = p.best_sched, p.best_makespan
+                comp = cluster.commit(view, sched, t)
+                records.append(self._record(p, view, t, comp, mk, sched))
+                new_completions.append(comp)
+        else:
+            fn = ONLINE_BASELINES[self.policy]
+            for p, view in zip(admit, views):
+                t0 = _time.perf_counter()
+                sched = fn(view.inst, use_wireless=view.inst.n_wireless > 0)
+                counters["wall"] += _time.perf_counter() - t0
+                counters["solves"] += 1
+                p.n_solves += 1
+                comp = cluster.commit(view, sched, t)
+                records.append(
+                    self._record(p, view, t, comp, sched.makespan, sched)
+                )
+                new_completions.append(comp)
+
+        for p in admit:
+            pending.remove(p)
+        return new_completions
+
+    @staticmethod
+    def _record(
+        p: _PendingJob,
+        view: ResidualView,
+        t: float,
+        comp: float,
+        mk: float,
+        sched: Schedule,
+    ) -> JobMetrics:
+        return JobMetrics(
+            job_id=p.event.job_id,
+            family=p.event.family,
+            arrival=p.event.time,
+            admitted=t,
+            completion=comp,
+            makespan=mk,
+            n_racks_granted=view.inst.n_racks,
+            n_wireless_granted=view.inst.n_wireless,
+            n_solves=p.n_solves,
+            assignment=view.rack_map[np.asarray(sched.rack, dtype=np.int64)],
+        )

@@ -1,0 +1,245 @@
+"""Arrival-stream workload generators for the online scheduling service.
+
+Every solver below :mod:`repro.online` is single-shot offline; this module
+supplies the missing half of the paper's "production scenario" (§V): jobs
+*arriving over time* and competing for the same wired channel, wireless
+subchannels, and racks. Three generators, all emitting reproducible
+streams of :class:`ArrivalEvent`:
+
+  * :func:`poisson_arrivals` — memoryless arrivals at a given rate over
+    the §V job families (``JOB_FAMILIES``), every job demanding the full
+    cluster shape.
+  * :func:`production_arrivals` — the paper's §V production-scenario mix:
+    family weights skewed toward MapReduce workflows, task counts
+    U[5, 10], fan-out drawn per family, per-job network factor rho drawn
+    from a weighted palette (the heavy tail models shuffle-dominant
+    jobs), and per-job rack demand below the full cluster so admission
+    actually has packing decisions to make.
+  * :func:`trace_arrivals` — trace-driven replay of explicit
+    ``(arrival_time, job)`` pairs.
+
+Determinism contract: a generator called twice with the same seed and
+parameters returns bit-identical streams (same arrival times, same DAGs,
+same demands). Streams are sorted by arrival time, times are
+non-negative, and every generated instance is feasible by construction —
+``tests/test_online.py`` locks all three properties in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.dag import (
+    DagJob,
+    JOB_FAMILIES,
+    make_onestage_mapreduce,
+    make_random_workflow,
+    make_simple_mapreduce,
+)
+from repro.core.instance import ProblemInstance
+
+__all__ = [
+    "ArrivalEvent",
+    "poisson_arrivals",
+    "production_arrivals",
+    "trace_arrivals",
+    "PRODUCTION_FAMILY_WEIGHTS",
+    "PRODUCTION_RHO_PALETTE",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalEvent:
+    """One job arrival.
+
+    Attributes:
+      time: absolute arrival time (non-negative; streams are sorted).
+      inst: the job plus its *demanded* resource shape — ``inst.n_racks``
+        / ``inst.n_wireless`` are what the job asks for; the cluster may
+        grant less (a residual-capacity view) at admission time.
+      job_id: position in the stream (0-based, unique per stream).
+      family: workload family tag (for metrics breakdowns).
+    """
+
+    time: float
+    inst: ProblemInstance
+    job_id: int
+    family: str
+
+
+def _sorted_events(events: list[ArrivalEvent]) -> list[ArrivalEvent]:
+    events.sort(key=lambda e: (e.time, e.job_id))
+    return events
+
+
+def _sample_family_job(
+    rng: np.random.Generator, family: str, n_tasks: int, rho: float
+) -> DagJob:
+    """One job of ``family`` with ~``n_tasks`` tasks (§V fan-out shapes)."""
+    if family == "simple_mapreduce":
+        return make_simple_mapreduce(rng, n_map=max(1, n_tasks - 1), rho=rho)
+    if family == "onestage_mapreduce":
+        n_map = max(1, n_tasks // 2)
+        return make_onestage_mapreduce(
+            rng, n_map=n_map, n_reduce=max(1, n_tasks - n_map), rho=rho
+        )
+    if family == "random_workflow":
+        return make_random_workflow(rng, n_tasks=n_tasks, rho=rho)
+    raise ValueError(f"unknown family {family!r}")
+
+
+def poisson_arrivals(
+    seed: int,
+    rate: float,
+    n_jobs: int,
+    *,
+    n_racks: int = 6,
+    n_wireless: int = 2,
+    rho: float = 0.5,
+    families: Sequence[str] = JOB_FAMILIES,
+    wired_rate: float = 1.0,
+    wireless_rate: float = 1.0,
+) -> list[ArrivalEvent]:
+    """Seeded Poisson arrivals over the §V job families.
+
+    Inter-arrival gaps are Exponential(``rate``) (``rate`` = expected jobs
+    per unit time, on the same clock as task durations ~ U[1, 100]);
+    each job is drawn uniformly from ``families`` with the paper's
+    task-count range U[5, 10] and a fixed network factor ``rho``. Every
+    job demands the full ``(n_racks, n_wireless)`` cluster shape.
+
+    Returns a time-sorted list of :class:`ArrivalEvent`; same seed =>
+    bit-identical stream.
+    """
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    events: list[ArrivalEvent] = []
+    for j in range(n_jobs):
+        t += float(rng.exponential(1.0 / rate))
+        family = str(families[int(rng.integers(len(families)))])
+        n_tasks = int(rng.integers(5, 11))
+        job = _sample_family_job(rng, family, n_tasks, rho)
+        inst = ProblemInstance(
+            job=job,
+            n_racks=n_racks,
+            n_wireless=n_wireless,
+            wired_rate=wired_rate,
+            wireless_rate=wireless_rate,
+        )
+        events.append(ArrivalEvent(time=t, inst=inst, job_id=j, family=family))
+    return _sorted_events(events)
+
+
+# §V production mix: MapReduce-style workflows dominate the trace, and a
+# minority of shuffle-heavy jobs (rho >= 1) supplies the data-size tail.
+PRODUCTION_FAMILY_WEIGHTS = {
+    "simple_mapreduce": 0.45,
+    "onestage_mapreduce": 0.35,
+    "random_workflow": 0.20,
+}
+PRODUCTION_RHO_PALETTE = ((0.5, 0.55), (1.0, 0.30), (1.5, 0.15))
+
+
+def production_arrivals(
+    seed: int,
+    rate: float,
+    n_jobs: int,
+    *,
+    n_racks: int = 6,
+    n_wireless: int = 2,
+    min_rack_demand: int = 3,
+    wired_rate: float = 1.0,
+    wireless_rate: float = 1.0,
+) -> list[ArrivalEvent]:
+    """The paper's §V production-scenario arrival mix.
+
+    Poisson arrivals at ``rate`` whose jobs follow the production
+    distributions: families weighted by
+    :data:`PRODUCTION_FAMILY_WEIGHTS`, task counts U[5, 10] with
+    family-specific fan-out (mappers = ``n_tasks - 1`` for simple
+    MapReduce, a balanced map/reduce split for one-stage shuffles), and a
+    per-job network factor drawn from :data:`PRODUCTION_RHO_PALETTE` —
+    most jobs are compute-bound (rho 0.5) with a shuffle-heavy tail
+    (rho 1.0 / 1.5) that stresses the shared channels. Each job demands
+    between ``min_rack_demand`` and ``n_racks`` racks (uniform), so the
+    cluster timeline has real packing decisions; wireless demand is the
+    full ``n_wireless``.
+
+    Returns a time-sorted list of :class:`ArrivalEvent`; same seed =>
+    bit-identical stream.
+    """
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+    if not 1 <= min_rack_demand <= n_racks:
+        raise ValueError("min_rack_demand must be in [1, n_racks]")
+    rng = np.random.default_rng(seed)
+    fam_names = tuple(PRODUCTION_FAMILY_WEIGHTS)
+    fam_p = np.asarray([PRODUCTION_FAMILY_WEIGHTS[f] for f in fam_names])
+    fam_p = fam_p / fam_p.sum()
+    rho_vals = np.asarray([v for v, _ in PRODUCTION_RHO_PALETTE])
+    rho_p = np.asarray([w for _, w in PRODUCTION_RHO_PALETTE])
+    rho_p = rho_p / rho_p.sum()
+
+    t = 0.0
+    events: list[ArrivalEvent] = []
+    for j in range(n_jobs):
+        t += float(rng.exponential(1.0 / rate))
+        family = str(fam_names[int(rng.choice(len(fam_names), p=fam_p))])
+        rho = float(rho_vals[int(rng.choice(len(rho_vals), p=rho_p))])
+        n_tasks = int(rng.integers(5, 11))
+        job = _sample_family_job(rng, family, n_tasks, rho)
+        demand = int(rng.integers(min_rack_demand, n_racks + 1))
+        inst = ProblemInstance(
+            job=job,
+            n_racks=demand,
+            n_wireless=n_wireless,
+            wired_rate=wired_rate,
+            wireless_rate=wireless_rate,
+        )
+        events.append(ArrivalEvent(time=t, inst=inst, job_id=j, family=family))
+    return _sorted_events(events)
+
+
+def trace_arrivals(
+    times: Iterable[float],
+    jobs: Iterable[DagJob],
+    *,
+    n_racks: int = 6,
+    n_wireless: int = 2,
+    wired_rate: float = 1.0,
+    wireless_rate: float = 1.0,
+) -> list[ArrivalEvent]:
+    """Trace-driven arrivals: replay explicit ``(time, job)`` pairs.
+
+    ``times`` need not be pre-sorted (the stream is sorted, stably by
+    input order on ties) but must be non-negative and match ``jobs`` in
+    length. Every job demands the full cluster shape; wrap the result to
+    override per-job demands.
+    """
+    times = [float(t) for t in times]
+    jobs = list(jobs)
+    if len(times) != len(jobs):
+        raise ValueError("times and jobs must have the same length")
+    if times and min(times) < 0.0:
+        raise ValueError("arrival times must be non-negative")
+    events = [
+        ArrivalEvent(
+            time=t,
+            inst=ProblemInstance(
+                job=job,
+                n_racks=n_racks,
+                n_wireless=n_wireless,
+                wired_rate=wired_rate,
+                wireless_rate=wireless_rate,
+            ),
+            job_id=j,
+            family=job.name,
+        )
+        for j, (t, job) in enumerate(zip(times, jobs))
+    ]
+    return _sorted_events(events)

@@ -1,0 +1,447 @@
+"""Online serving layer contracts: workload generator reproducibility and
+feasibility, cluster-timeline residual/commit semantics, the degenerate
+reduction of the service to one ``schedule_fleet`` call, event-loop
+conservation properties, the warm-start seed-pool hook (budget
+neutrality and never-worse), the portfolio allocator's ``yield_decay``
+option, online baselines, and the benchmark JSON emitter."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ONLINE_BASELINES,
+    ProblemInstance,
+    check_feasible,
+    g_list_schedule,
+    random_job,
+    schedule_fleet,
+    vectorized_search,
+)
+from repro.core.dag import make_onestage_mapreduce
+from repro.core.portfolio import Portfolio, build_strategies
+from repro.online import (
+    ClusterTimeline,
+    OnlineScheduler,
+    poisson_arrivals,
+    production_arrivals,
+    trace_arrivals,
+)
+
+FAST_SOLVER = dict(
+    max_enumerate=500, n_samples=128, batch_size=256,
+    refine_rounds=2, refine_pool=128,
+)
+SAMPLED_SOLVER = dict(
+    max_enumerate=64, n_samples=64, batch_size=256,
+    refine_rounds=2, refine_pool=96, strategies="portfolio",
+)
+
+
+# ---------------------------------------------------------------------------
+# Workload generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gen", ["poisson", "production"])
+def test_workload_streams_are_reproducible(gen):
+    make = {
+        "poisson": lambda s: poisson_arrivals(s, rate=0.02, n_jobs=12),
+        "production": lambda s: production_arrivals(s, rate=0.02, n_jobs=12),
+    }[gen]
+    a, b = make(7), make(7)
+    c = make(8)
+    assert len(a) == len(b) == 12
+    for ea, eb in zip(a, b):
+        assert ea.time == eb.time and ea.family == eb.family
+        assert np.array_equal(ea.inst.job.p, eb.inst.job.p)
+        assert np.array_equal(ea.inst.job.edges, eb.inst.job.edges)
+        assert np.array_equal(ea.inst.job.d, eb.inst.job.d)
+        assert ea.inst.n_racks == eb.inst.n_racks
+    assert any(x.time != y.time for x, y in zip(a, c))  # seed matters
+
+
+@pytest.mark.parametrize("gen", ["poisson", "production", "trace"])
+def test_workload_times_sorted_nonnegative_and_ids_unique(gen):
+    if gen == "trace":
+        jobs = [random_job(np.random.default_rng(s), None) for s in range(6)]
+        evs = trace_arrivals([5.0, 1.0, 3.0, 0.0, 9.0, 2.0], jobs)
+    elif gen == "poisson":
+        evs = poisson_arrivals(3, rate=0.05, n_jobs=10)
+    else:
+        evs = production_arrivals(3, rate=0.05, n_jobs=10)
+    times = [e.time for e in evs]
+    assert times == sorted(times)
+    assert all(t >= 0.0 for t in times)
+    assert sorted(e.job_id for e in evs) == list(range(len(evs)))
+
+
+def test_workload_instances_pass_check_feasible_on_greedy_schedule():
+    evs = poisson_arrivals(1, rate=0.05, n_jobs=5) + production_arrivals(
+        1, rate=0.05, n_jobs=5
+    )
+    for e in evs:
+        sched = g_list_schedule(e.inst, use_wireless=True)
+        assert check_feasible(e.inst, sched) == sched.makespan
+        assert sched.makespan > 0.0
+
+
+def test_production_mix_covers_families_and_demands():
+    evs = production_arrivals(0, rate=0.05, n_jobs=40, n_racks=6, min_rack_demand=4)
+    fams = {e.family for e in evs}
+    assert fams == {"simple_mapreduce", "onestage_mapreduce", "random_workflow"}
+    demands = {e.inst.n_racks for e in evs}
+    assert demands <= {4, 5, 6} and len(demands) > 1
+    assert 5 <= min(e.inst.job.n_tasks for e in evs)
+    assert max(e.inst.job.n_tasks for e in evs) <= 10
+
+
+def test_trace_arrivals_validation():
+    jobs = [random_job(np.random.default_rng(0), None)]
+    with pytest.raises(ValueError):
+        trace_arrivals([1.0, 2.0], jobs)  # length mismatch
+    with pytest.raises(ValueError):
+        trace_arrivals([-1.0], jobs)  # negative time
+
+
+# ---------------------------------------------------------------------------
+# Cluster timeline
+# ---------------------------------------------------------------------------
+
+def test_cluster_residual_and_commit_roundtrip():
+    cl = ClusterTimeline(n_racks=4, n_wireless=2)
+    inst = ProblemInstance(
+        job=random_job(np.random.default_rng(0), None, n_tasks=6),
+        n_racks=3,
+        n_wireless=2,
+    )
+    view = cl.residual_view(inst, 0.0)
+    assert view.full and view.inst.n_racks == 3 and view.inst.n_wireless == 2
+    assert list(view.rack_map) == [0, 1, 2]
+    sched = g_list_schedule(view.inst, use_wireless=True)
+    comp = cl.commit(view, sched, t=10.0)
+    assert comp == 10.0 + sched.makespan
+    # Racks the job used are held past t=10; rack 3 stays free.
+    used = sorted({int(view.rack_map[r]) for r in sched.rack})
+    free_now = set(cl.free_racks(10.0).tolist())
+    assert not (set(used) & free_now) and 3 in free_now
+    # After the completion everything is free again.
+    assert cl.free_racks(comp + 1e-6).size == 4
+    assert cl.free_wireless(comp + 1e-6).size == 2
+
+
+def test_cluster_rack_pool_grants_are_exclusive():
+    cl = ClusterTimeline(n_racks=6, n_wireless=1)
+    inst = ProblemInstance(
+        job=random_job(np.random.default_rng(1), None, n_tasks=5),
+        n_racks=4,
+        n_wireless=1,
+    )
+    pool = cl.free_racks(0.0)
+    v1 = cl.residual_view(inst, 0.0, rack_pool=pool)
+    pool = pool[v1.inst.n_racks:]
+    v2 = cl.residual_view(inst, 0.0, rack_pool=pool)
+    assert list(v1.rack_map) == [0, 1, 2, 3]
+    assert list(v2.rack_map) == [4, 5] and v2.inst.n_racks == 2 and not v2.full
+    assert cl.residual_view(inst, 0.0, rack_pool=pool[2:]) is None
+
+
+# ---------------------------------------------------------------------------
+# Degenerate reduction: one epoch == one schedule_fleet call
+# ---------------------------------------------------------------------------
+
+def test_degenerate_arrivals_match_schedule_fleet():
+    """All jobs at t=0, one admission window, demands fitting the cluster:
+    the online service's per-job assignments and JCTs must be bit-for-bit
+    a direct ``schedule_fleet`` call on the demand-shaped instances."""
+    demands = (2, 3, 3)
+    jobs = [random_job(np.random.default_rng(40 + j), None, rho=0.8) for j in range(3)]
+    evs = trace_arrivals([0.0] * 3, jobs, n_racks=8, n_wireless=2)
+    evs = [
+        dataclasses.replace(e, inst=dataclasses.replace(e.inst, n_racks=d))
+        for e, d in zip(evs, demands)
+    ]
+    svc = OnlineScheduler(8, 2, window=0.0, seed=11, solver_kwargs=FAST_SOLVER)
+    res = svc.serve(evs)
+    direct = schedule_fleet(
+        [e.inst for e in evs],
+        seed=[11 + 1009 * e.job_id for e in evs],
+        **FAST_SOLVER,
+    )
+    assert res.n_epochs == 1 and res.n_batches == 1
+    offsets = np.cumsum([0] + list(demands[:-1]))
+    for job, dres, off in zip(res.jobs, direct.results, offsets):
+        assert job.queueing_delay == 0.0
+        assert job.jct == dres.makespan  # bit-for-bit, no tolerance
+        # Local labels map onto the contiguous physical grant.
+        assert np.array_equal(job.assignment, dres.best_assignment + off)
+
+
+def test_degenerate_reduction_holds_for_warm_and_cold():
+    jobs = [random_job(np.random.default_rng(60 + j), None) for j in range(2)]
+    evs = trace_arrivals([0.0, 0.0], jobs, n_racks=8, n_wireless=1)
+    evs = [
+        dataclasses.replace(e, inst=dataclasses.replace(e.inst, n_racks=4))
+        for e in evs
+    ]
+    a = OnlineScheduler(8, 1, window=0.0, warm_start=True,
+                        solver_kwargs=FAST_SOLVER).serve(evs)
+    b = OnlineScheduler(8, 1, window=0.0, warm_start=False,
+                        solver_kwargs=FAST_SOLVER).serve(evs)
+    assert [j.jct for j in a.jobs] == [j.jct for j in b.jobs]
+
+
+# ---------------------------------------------------------------------------
+# Event loop conservation properties
+# ---------------------------------------------------------------------------
+
+def _serve(seed=0, rate=1 / 30, n_jobs=8, **kw):
+    evs = production_arrivals(
+        seed, rate=rate, n_jobs=n_jobs, n_racks=6, n_wireless=2, min_rack_demand=4
+    )
+    args = dict(window=5.0, solver_kwargs=FAST_SOLVER, seed=seed)
+    args.update(kw)
+    return evs, OnlineScheduler(6, 2, **args).serve(evs)
+
+
+def test_event_loop_serves_every_job_exactly_once():
+    evs, res = _serve()
+    assert sorted(j.job_id for j in res.jobs) == [e.job_id for e in evs]
+    for j, e in zip(res.jobs, evs):
+        assert j.arrival == e.time
+        assert j.admitted >= j.arrival  # no time travel
+        assert j.queueing_delay >= 0.0
+        assert j.jct >= j.makespan  # JCT includes queueing
+        assert j.completion == j.admitted + j.makespan
+        assert 1 <= j.n_racks_granted <= e.inst.n_racks
+        assert np.all(j.assignment < 6)  # physical rack range
+    assert res.horizon == max(j.completion for j in res.jobs)
+    assert 0.0 < res.rack_utilization <= 1.0
+
+
+def test_service_is_deterministic():
+    _, a = _serve(seed=3)
+    _, b = _serve(seed=3)
+    assert [j.jct for j in a.jobs] == [j.jct for j in b.jobs]
+    assert a.n_epochs == b.n_epochs and a.n_candidates == b.n_candidates
+
+
+def test_contention_causes_queueing_and_preserve_order_is_fifo():
+    # High rate on a small cluster: some job must queue.
+    evs, res = _serve(seed=1, rate=1 / 5, n_jobs=6, require_full_demand=True,
+                      preserve_order=True)
+    assert res.mean_queueing_delay > 0.0
+    # FIFO: admissions are non-decreasing in arrival order.
+    adm = [j.admitted for j in res.jobs]
+    assert all(a <= b + 1e-9 for a, b in zip(adm, adm[1:]))
+    # Queued fleet jobs were re-planned while waiting.
+    assert any(j.n_solves > 1 for j in res.jobs)
+
+
+def test_online_baselines_run_and_fifo_solo_serializes():
+    evs, fifo = _serve(seed=2, rate=1 / 10, n_jobs=5, policy="fifo_solo")
+    # Solo: at most one job on the cluster at any time -> execution
+    # intervals are pairwise disjoint.
+    spans = sorted((j.admitted, j.completion) for j in fifo.jobs)
+    for (s0, e0), (s1, _) in zip(spans, spans[1:]):
+        assert s1 >= e0 - 1e-9
+    _, greedy = _serve(seed=2, rate=1 / 10, n_jobs=5, policy="greedy_list")
+    assert greedy.n_candidates == 0  # no search in the baseline
+    assert len(greedy.jobs) == 5
+    assert set(ONLINE_BASELINES) == {"fifo_solo", "greedy_list"}
+
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        OnlineScheduler(4, 1, policy="nope")
+
+
+# ---------------------------------------------------------------------------
+# Warm-start seed-pool hook
+# ---------------------------------------------------------------------------
+
+def dense_instance(seed):
+    job = make_onestage_mapreduce(
+        np.random.default_rng(seed), n_map=9, n_reduce=9, rho=1.0
+    )
+    return ProblemInstance(job=job, n_racks=6, n_wireless=1)
+
+
+def test_seed_pool_is_budget_neutral_and_never_worse():
+    from repro.core.vectorized import make_batched_evaluator
+
+    inst = dense_instance(0)
+    kw = dict(max_enumerate=500, n_samples=256, batch_size=512,
+              refine_rounds=2, refine_pool=128)
+    cold = vectorized_search(inst, seed=0, **kw)
+    # Seed with the cold incumbent: same sweep budget, and the seeded
+    # sweep must re-discover at least that incumbent's greedy quality.
+    warm = vectorized_search(
+        inst, seed=0, seed_pool=cold.best_assignment[None, :], **kw
+    )
+
+    def sweep_candidates(res):
+        return res.n_candidates - sum(
+            s.proposed for s in res.strategy_stats.values()
+        )
+
+    assert sweep_candidates(warm) == sweep_candidates(cold)  # budget-neutral
+    evaluate = make_batched_evaluator(inst)
+    g_warm = float(np.asarray(evaluate(warm.best_assignment[None, :]))[0])
+    g_cold = float(np.asarray(evaluate(cold.best_assignment[None, :]))[0])
+    assert g_warm <= g_cold + 1e-6  # the seed is re-evaluated in the sweep
+
+
+def test_seed_pool_folds_foreign_labels_and_ignores_enumerate_regime():
+    inst = ProblemInstance(
+        job=random_job(np.random.default_rng(2), None, n_tasks=5), n_racks=3
+    )
+    n = inst.job.n_tasks
+    # Labels from a 10-rack view fold into [0, 3); enumerated regime
+    # ignores seeds entirely (the sweep is already exhaustive).
+    pool = np.full((2, n), 7, dtype=np.int64)
+    a = vectorized_search(inst, seed=0, max_enumerate=10_000, seed_pool=pool)
+    b = vectorized_search(inst, seed=0, max_enumerate=10_000)
+    assert a.makespan == b.makespan and a.n_candidates == b.n_candidates
+
+
+def test_schedule_fleet_seed_pool_validation():
+    insts = [dense_instance(s) for s in range(2)]
+    with pytest.raises(ValueError, match="seed pool"):
+        schedule_fleet(insts, seed_pools=[None])  # wrong length
+
+
+def test_warm_service_never_worse_than_cold_on_contended_trace():
+    """The service-level guarantee behind the docs table: with full-demand
+    FIFO admission and common random numbers, warm-started re-optimization
+    is never worse than cold-start at equal per-solve budget."""
+    for seed in (0, 5):
+        evs = production_arrivals(
+            seed, rate=1 / 40, n_jobs=6, n_racks=6, n_wireless=2, min_rack_demand=4
+        )
+        args = dict(window=5.0, require_full_demand=True, preserve_order=True,
+                    solver_kwargs=SAMPLED_SOLVER, seed=seed)
+        warm = OnlineScheduler(6, 2, warm_start=True, **args).serve(evs)
+        cold = OnlineScheduler(6, 2, warm_start=False, **args).serve(evs)
+        assert warm.mean_jct <= cold.mean_jct + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Portfolio allocator yield decay (satellite)
+# ---------------------------------------------------------------------------
+
+def _drive_portfolio(yield_decay, vals_by_round):
+    """Run synthetic rounds through a 2-strategy portfolio and return the
+    weight trajectory. Each round both strategies propose, and the given
+    per-strategy best values are fed back as scored evaluations."""
+    inst = dense_instance(1)
+    p = Portfolio(
+        build_strategies(("mutation", "crossover")),
+        inst,
+        np.random.default_rng(0),
+        pool_size=8,
+        yield_decay=yield_decay,
+    )
+    n = inst.job.n_tasks
+    best = np.zeros(n, dtype=np.int64)
+    traj = []
+    for r, (v0, v1) in enumerate(vals_by_round):
+        start_best = 100.0 - r  # improving incumbent
+        pool, tags = p.begin_round(best, start_best)
+        for s_idx, v in ((0, v0), (1, v1)):
+            m = tags == s_idx
+            p.observe(tags[m], pool[m], np.full(m.sum(), v), start_best)
+        p.end_round(best, min(start_best, v0, v1))
+        traj.append(p.weights.copy())
+    return traj
+
+
+def test_yield_decay_default_off_is_bit_for_bit():
+    rounds = [(95.0, 99.0), (99.0, 93.0), (99.0, 99.0)]
+    base = _drive_portfolio(0.0, rounds)
+    # Manual reference of the memoryless multiplicative-weights update.
+    inst = dense_instance(1)
+    ref = Portfolio(
+        build_strategies(("mutation", "crossover")),
+        inst,
+        np.random.default_rng(0),
+        pool_size=8,
+    )
+    assert ref.yield_decay == 0.0  # default off
+    for got, want in zip(base, _drive_portfolio(0.0, rounds)):
+        assert np.array_equal(got, want)
+    # Against a hand-computed first round: strategy 0 improves by 5 over
+    # its 4 evaluated rows, strategy 1 by 1 -> weights follow exp(eta*y/max).
+    w = np.ones(2)
+    yields = np.array([5.0 / 4.0, 1.0 / 4.0])
+    w = w * np.exp(2.0 * yields / yields.max())
+    w = np.clip(w / w.mean(), 0.05, 20.0)
+    assert np.allclose(base[0], w)
+
+
+def test_yield_decay_stalled_rounds_freeze_weights():
+    """A stalled round must not re-apply stale evidence: after one lucky
+    round, rounds with zero current yield leave the weights untouched
+    (decay only shapes how the NEXT productive round's shift is split)."""
+    lucky_then_stalled = [(90.0, 99.0)] + [(999.0, 999.0)] * 4
+    traj = _drive_portfolio(0.3, lucky_then_stalled)
+    for later in traj[1:]:
+        assert np.array_equal(later, traj[0])
+
+
+def test_yield_decay_remembers_stale_rounds():
+    # Strategy 0 wins round 0, then goes quiet; strategy 1 wins later.
+    rounds = [(90.0, 99.0), (99.0, 98.0), (99.0, 98.5)]
+    memoryless = _drive_portfolio(0.0, rounds)
+    decayed = _drive_portfolio(0.5, rounds)
+    # With decay, strategy 0's early yield keeps boosting its weight
+    # after it stops producing; memoryless forgets it immediately.
+    assert decayed[-1][0] / decayed[-1][1] > memoryless[-1][0] / memoryless[-1][1]
+    with pytest.raises(ValueError):
+        _drive_portfolio(1.0, rounds)  # decay must be < 1
+
+
+# ---------------------------------------------------------------------------
+# Benchmark JSON emitter (satellite)
+# ---------------------------------------------------------------------------
+
+def test_bench_json_schema_roundtrip(tmp_path):
+    from benchmarks import common
+
+    common.reset_results()
+    try:
+        common.emit("unit_case", 12.5, "mean_jct=101.5;wins=3/6;mode=quick")
+        out = tmp_path / "BENCH_unit.json"
+        common.write_json(str(out), bench="unit", config={"seeds": 6})
+        doc = json.loads(out.read_text())
+        assert doc["schema"] == common.BENCH_SCHEMA
+        assert doc["bench"] == "unit" and doc["config"]["seeds"] == 6
+        (rec,) = doc["results"]
+        assert rec["name"] == "unit_case" and rec["us_per_call"] == 12.5
+        assert rec["metrics"]["mean_jct"] == 101.5
+        assert rec["metrics"]["wins"] == "3/6"  # non-numeric kept verbatim
+    finally:
+        common.reset_results()
+
+
+@pytest.mark.slow
+def test_online_serving_benchmark_arrival_sweep(tmp_path):
+    """Nightly: the arrival-rate sweep runs end-to-end and its JSON
+    artifact carries JCT + throughput metrics for every rate."""
+    from benchmarks import common, online_serving
+
+    common.reset_results()
+    try:
+        out = tmp_path / "BENCH_online_serving.json"
+        online_serving.main(["--json", str(out)])
+        doc = json.loads(out.read_text())
+        names = [r["name"] for r in doc["results"]]
+        assert any(n.startswith("online_rate") for n in names)
+        assert "online_warm_vs_cold_summary" in names
+        summary = next(
+            r for r in doc["results"] if r["name"] == "online_warm_vs_cold_summary"
+        )
+        assert summary["metrics"]["losses"].startswith("0/")
+    finally:
+        common.reset_results()

@@ -1,17 +1,24 @@
 """Online serving benchmarks: JCT and scheduler throughput under
 continuous job arrival (the paper's §V production scenario), plus the
-warm-started re-optimization comparison that backs the table in
-``docs/benchmarks.md``.
+comparisons that back the tables in ``docs/benchmarks.md``.
 
-  run()                — arrival-rate sweep: mean/p95 JCT, queueing delay,
-                         scheduler throughput, with bandwidth augmentation
-                         on (|K|=2) and off (|K|=0), fleet policy vs the
-                         online FIFO-solo and greedy-list baselines.
-  run_warm_vs_cold()   — warm-started vs cold-started re-optimization at
-                         equal candidate budget on the production mix
-                         (per-seed mean JCT; the docs table).
+  run()                 — arrival-rate sweep: mean/p95 JCT, queueing delay,
+                          scheduler throughput and true (channel-feasible)
+                          utilizations, with bandwidth augmentation on
+                          (|K|=2) and off (|K|=0), fleet policy vs the
+                          online FIFO-solo and greedy-list baselines.
+  run_warm_vs_cold()    — warm-started vs cold-started re-optimization at
+                          equal candidate budget on the production mix
+                          (per-seed mean JCT; the docs table).
+  run_admission_modes() — default overtaking vs preserve_order FIFO vs
+                          channel-proven backfilling on a production mix
+                          with rack- and wireless-demand spread (per-seed
+                          mean JCT + backfill counters; the docs table).
 
-Quick mode keeps each section under ~a minute on the CPU container;
+All JCT/utilization figures are measured under channel-feasible commits
+(cross-job wired/wireless arbitration), so they are NOT comparable to the
+PR 4 records, which allowed physically overlapping transfers. Quick mode
+keeps each section under ~a minute on the CPU container;
 REPRO_BENCH_FULL=1 widens seeds and rates. ``--json out.json`` writes the
 machine-readable BENCH record.
 """
@@ -79,6 +86,8 @@ def run() -> None:
                 f";makespan={res.makespan:.1f}"
                 f";jobs_per_solver_s={res.jobs_per_solver_second:.2f}"
                 f";rack_util={res.rack_utilization:.2f}"
+                f";wired_util={res.wired_utilization:.2f}"
+                f";wireless_util={res.wireless_utilization:.2f}"
                 f";pruned={res.n_pruned};cands={res.n_candidates}"
                 f";epochs={res.n_epochs};batches={res.n_batches}",
             )
@@ -100,7 +109,10 @@ def run() -> None:
                 1e6 * wall / n_jobs,
                 f"mean_jct={res.mean_jct:.1f};p95_jct={res.p95_jct:.1f}"
                 f";mean_queue={res.mean_queueing_delay:.1f}"
-                f";makespan={res.makespan:.1f}",
+                f";makespan={res.makespan:.1f}"
+                f";rack_util={res.rack_utilization:.2f}"
+                f";wired_util={res.wired_utilization:.2f}"
+                f";wireless_util={res.wireless_utilization:.2f}",
             )
 
 
@@ -154,6 +166,82 @@ def run_warm_vs_cold() -> None:
     )
 
 
+def run_admission_modes() -> None:
+    """Default overtaking vs preserve_order FIFO vs channel-proven
+    backfilling, at equal everything else.
+
+    Production mix with a rack-demand *and* wireless-demand spread (not
+    every job uses the augmentation links), at a rate that keeps a deep
+    queue — the regime where head-of-line blocking costs and backfilling
+    can overtake. All three arms run full-demand admission and the same
+    engine budget; ``backfill`` additionally lets a queued job overtake
+    the blocked head-of-line job when arbitration proves the overtake
+    cannot delay its admission epoch (completion within the reservation,
+    or shadow slack). The docs/benchmarks.md admission-mode table is this
+    function's output.
+    """
+    n_seeds = 6 if not FULL else 10
+    rate, n_jobs = 1 / 12, 12
+    modes = (
+        ("default", dict()),
+        ("preserve_order", dict(preserve_order=True)),
+        ("backfill", dict(preserve_order=True, backfill=True)),
+    )
+    means = {tag: [] for tag, _ in modes}
+    backfills = rejected = 0
+    bf_wins = bf_losses = 0
+    for seed in range(n_seeds):
+        evs = production_arrivals(
+            seed,
+            rate=rate,
+            n_jobs=n_jobs,
+            n_racks=CLUSTER["n_racks"],
+            n_wireless=CLUSTER["n_wireless"],
+            min_rack_demand=2,
+            min_wireless_demand=0,
+        )
+        per_seed = {}
+        t0 = time.perf_counter()
+        for tag, kw in modes:
+            res = OnlineScheduler(
+                CLUSTER["n_racks"], CLUSTER["n_wireless"], window=5.0,
+                require_full_demand=True, warm_start=True, seed=seed,
+                solver_kwargs=SOLVER, **kw,
+            ).serve(evs)
+            per_seed[tag] = res
+            means[tag].append(res.mean_jct)
+        wall = time.perf_counter() - t0
+        bf, po = per_seed["backfill"], per_seed["preserve_order"]
+        backfills += bf.n_backfilled
+        rejected += bf.n_backfill_rejected
+        d = po.mean_jct - bf.mean_jct
+        bf_wins += d > 1e-9
+        bf_losses += d < -1e-9
+        emit(
+            f"online_admission_modes_seed{seed}",
+            1e6 * wall / (len(modes) * n_jobs),
+            f"default_jct={per_seed['default'].mean_jct:.1f}"
+            f";preserve_order_jct={po.mean_jct:.1f}"
+            f";backfill_jct={bf.mean_jct:.1f}"
+            f";n_backfilled={bf.n_backfilled}"
+            f";n_backfill_rejected={bf.n_backfill_rejected}"
+            f";backfill_rack_util={bf.rack_utilization:.2f}"
+            f";backfill_wired_util={bf.wired_utilization:.2f}",
+        )
+    mean_of = {tag: float(np.mean(v)) for tag, v in means.items()}
+    emit(
+        "online_admission_modes_summary",
+        0,
+        f"default_mean_jct={mean_of['default']:.2f}"
+        f";preserve_order_mean_jct={mean_of['preserve_order']:.2f}"
+        f";backfill_mean_jct={mean_of['backfill']:.2f}"
+        f";backfill_reduction="
+        f"{100 * (1 - mean_of['backfill'] / mean_of['preserve_order']):.2f}%"
+        f";backfill_wins={bf_wins}/{n_seeds};backfill_losses={bf_losses}/{n_seeds}"
+        f";backfilled={backfills};rejected={rejected}",
+    )
+
+
 def main(argv=None):
     from benchmarks import common
 
@@ -161,12 +249,13 @@ def main(argv=None):
     parser.add_argument(
         "--skip-sweep",
         action="store_true",
-        help="run only the warm-vs-cold section",
+        help="run only the warm-vs-cold and admission-mode sections",
     )
     args = parser.parse_args(argv)
     if not args.skip_sweep:
         run()
     run_warm_vs_cold()
+    run_admission_modes()
     if args.json:
         common.write_json(args.json, bench="online_serving")
 

@@ -31,7 +31,12 @@ import numpy as np
 
 from repro.core.instance import CH_WIRED, ProblemInstance
 from repro.core.schedule import Schedule
-from repro.core.simulator import _Timeline, critical_path_priority, simulate
+from repro.core.simulator import (
+    _Timeline,
+    critical_path_priority,
+    seed_channel_timelines,
+    simulate,
+)
 
 __all__ = [
     "single_rack_schedule",
@@ -73,12 +78,19 @@ def random_schedule(
     return simulate(inst, rack, use_wireless=use_wireless)
 
 
-def list_schedule(inst: ProblemInstance, use_wireless: bool = False) -> Schedule:
+def list_schedule(
+    inst: ProblemInstance,
+    use_wireless: bool = False,
+    channel_busy: dict | None = None,
+) -> Schedule:
     """ETF list scheduling with uncapacitated-network estimates [20].
 
     Greedy pass chooses racks assuming transfers never contend; the final
     schedule is produced by the contention-aware simulator on that
-    assignment.
+    assignment. ``channel_busy`` (the simulator's replay hook) lets the
+    online service hand over pre-existing busy intervals of the shared
+    physical channels, so the executed schedule gap-inserts around other
+    jobs' committed transfers.
     """
     job = inst.job
     n = job.n_tasks
@@ -116,7 +128,9 @@ def list_schedule(inst: ProblemInstance, use_wireless: bool = False) -> Schedule
         finish[v] = s + job.p[v]
         rack_free[i] = finish[v]
         placed[v] = True
-    return simulate(inst, rack, use_wireless=use_wireless)
+    return simulate(
+        inst, rack, use_wireless=use_wireless, channel_busy=channel_busy
+    )
 
 
 def partition_schedule(inst: ProblemInstance, use_wireless: bool = False) -> Schedule:
@@ -140,10 +154,15 @@ def _g_list(
     inst: ProblemInstance,
     use_wireless: bool,
     candidate_racks,
+    channel_busy: dict | None = None,
 ) -> Schedule:
     """Shared engine for G-List variants: contention-aware greedy placement.
 
     ``candidate_racks(v, rack, load)`` yields the rack ids considered for v.
+    ``channel_busy`` seeds the channel timelines with pre-existing busy
+    intervals (other jobs' committed transfers, in this instance's time
+    frame), so both the greedy channel choices and the final placement
+    respect cross-job contention on the shared physical channels.
     """
     job = inst.job
     n, m = job.n_tasks, job.n_edges
@@ -155,6 +174,10 @@ def _g_list(
     rack_tl = [_Timeline() for _ in range(inst.n_racks)]
     chan_ids = [CH_WIRED] + ([2 + k for k in range(inst.n_wireless)] if use_wireless else [])
     chan_tl = {c: _Timeline() for c in chan_ids}
+    # Non-strict: channels this variant does not place on (e.g. wireless
+    # under use_wireless=False) cannot conflict, so their intervals are
+    # irrelevant rather than an error.
+    seed_channel_timelines(chan_tl, channel_busy, strict=False)
     dur = inst.durations_matrix()
     start = np.zeros(n)
     finish = np.zeros(n)
@@ -213,9 +236,16 @@ def _g_list(
     return sched
 
 
-def g_list_schedule(inst: ProblemInstance, use_wireless: bool = False) -> Schedule:
+def g_list_schedule(
+    inst: ProblemInstance,
+    use_wireless: bool = False,
+    channel_busy: dict | None = None,
+) -> Schedule:
     return _g_list(
-        inst, use_wireless, lambda v, rack, fin: range(inst.n_racks)
+        inst,
+        use_wireless,
+        lambda v, rack, fin: range(inst.n_racks),
+        channel_busy=channel_busy,
     )
 
 
@@ -259,7 +289,11 @@ BASELINES = {
 # test and lives in the service itself.
 
 
-def fifo_solo_schedule(inst: ProblemInstance, use_wireless: bool = True) -> Schedule:
+def fifo_solo_schedule(
+    inst: ProblemInstance,
+    use_wireless: bool = True,
+    channel_busy: dict | None = None,
+) -> Schedule:
     """Per-job scheduler of the online *FIFO-solo* baseline.
 
     FIFO-solo serves jobs strictly one at a time in arrival order, each
@@ -267,23 +301,36 @@ def fifo_solo_schedule(inst: ProblemInstance, use_wireless: bool = True) -> Sche
     admission rule — whole cluster idle, head-of-line job only); the
     per-job schedule is ETF list scheduling executed under real
     contention. JCT is then dominated by head-of-line queueing, which is
-    what the batched fleet policy is measured against.
+    what the batched fleet policy is measured against. ``channel_busy``
+    is accepted for signature uniformity with the other online baselines
+    (the service commits every policy through the same channel-feasible
+    arbitration path); under the solo rule the cluster is idle at
+    admission, so it is always empty.
     """
-    return list_schedule(inst, use_wireless=use_wireless)
+    return list_schedule(
+        inst, use_wireless=use_wireless, channel_busy=channel_busy
+    )
 
 
 def greedy_list_online_schedule(
-    inst: ProblemInstance, use_wireless: bool = True
+    inst: ProblemInstance,
+    use_wireless: bool = True,
+    channel_busy: dict | None = None,
 ) -> Schedule:
     """Per-job scheduler of the online *greedy-list* baseline.
 
     Greedy-list admits jobs onto residual capacity exactly like the fleet
-    policy (same windows, same residual instances) but places each job
-    with the contention-aware G-List heuristic instead of searching — no
-    candidate batches, no warm starts. It isolates the value of the
-    search engine from the value of the admission machinery.
+    policy (same windows, same residual instances, same channel-feasible
+    arbitrated commits) but places each job with the contention-aware
+    G-List heuristic instead of searching — no candidate batches, no warm
+    starts. ``channel_busy`` carries the busy intervals already committed
+    on the job's physical channels, so the heuristic's channel choices
+    see cross-job contention too. It isolates the value of the search
+    engine from the value of the admission machinery.
     """
-    return g_list_schedule(inst, use_wireless=use_wireless)
+    return g_list_schedule(
+        inst, use_wireless=use_wireless, channel_busy=channel_busy
+    )
 
 
 ONLINE_BASELINES = {

@@ -25,6 +25,7 @@ from repro.core.schedule import Schedule
 
 __all__ = [
     "simulate",
+    "seed_channel_timelines",
     "critical_path_priority",
     "build_op_tables",
     "pad_op_tables",
@@ -212,6 +213,33 @@ def pad_op_tables(
     )
 
 
+def seed_channel_timelines(
+    chan_tl: dict, channel_busy: dict | None, *, strict: bool = True
+) -> None:
+    """Seed capacitated-channel timelines with pre-existing busy intervals.
+
+    The single normalization point for the ``channel_busy`` replay hook
+    (shared by :func:`simulate` and the busy-aware heuristic baselines):
+    intervals are sorted and empty/inverted ones dropped. ``strict=True``
+    rejects a channel id the caller's timeline set does not model;
+    ``strict=False`` ignores it (a scheduler that never places transfers
+    on that channel cannot conflict with it).
+    """
+    if not channel_busy:
+        return
+    for c, intervals in channel_busy.items():
+        if c not in chan_tl:
+            if strict:
+                raise ValueError(
+                    f"channel_busy for channel {c} not in this instance "
+                    f"(capacitated channels: {sorted(chan_tl)})"
+                )
+            continue
+        chan_tl[c].busy = sorted(
+            (float(s), float(e)) for s, e in intervals if float(e) > float(s)
+        )
+
+
 class _Timeline:
     """Sorted busy intervals of a unary resource with gap search."""
 
@@ -265,6 +293,7 @@ def simulate(
     priority: np.ndarray | None = None,
     use_wireless: bool = True,
     check: bool = True,
+    channel_busy: dict | None = None,
 ) -> Schedule:
     """Serial schedule generation.
 
@@ -279,6 +308,16 @@ def simulate(
       use_wireless: when False, AUTO channels may only pick the wired channel
         (the paper's wired-only baselines).
       check: run the OP feasibility checker on the result.
+      channel_busy: optional offset-respecting replay hook — a mapping from
+        channel id (CH_WIRED or 2+k) to pre-existing busy intervals
+        ``[(start, end), ...]`` in this instance's time frame. Transfers are
+        gap-inserted around them exactly like around the job's own transfers,
+        so a schedule committed onto a shared cluster can be re-derived with
+        cross-job channel offsets while keeping the rack and channel decision
+        vectors fixed. Intervals may start before time 0 (a transfer of
+        another job straddling the replay origin). With no busy intervals and
+        a fixed ``chan`` equal to a previous run's resolved channels, the
+        replay reproduces that run bit-for-bit.
 
     Returns a complete Schedule.
     """
@@ -307,6 +346,7 @@ def simulate(
     chan_tl = {CH_WIRED: _Timeline()}
     for k in range(inst.n_wireless):
         chan_tl[2 + k] = _Timeline()
+    seed_channel_timelines(chan_tl, channel_busy)
 
     start = np.full(n, -1.0)
     finish_task = np.full(n, np.inf)

@@ -3,11 +3,17 @@
 Turns the offline mega-batch engine into a serving system for the paper's
 production scenario (§V): jobs arrive over time, queue for residual
 cluster capacity, and are (re-)optimized in windowed ``schedule_fleet``
-mega-batches with warm-started search. Layers:
+mega-batches with warm-started search. Commits are channel-feasible:
+every schedule is arbitrated onto the shared physical wired channel and
+its exclusively granted wireless subchannels before it lands on the
+cluster timeline, and the committed timeline is audited overlap-free.
+Layers:
 
   workload  — seeded Poisson / production-mix / trace arrival generators
-  cluster   — global cluster timeline and residual-capacity instances
-  service   — admission event loop + warm-started re-optimization
+  cluster   — global cluster timeline, residual-capacity instances,
+              cross-job channel arbitration + feasibility audit
+  service   — admission event loop (FIFO / backfilling / free overtaking)
+              + warm-started re-optimization
   metrics   — per-job queueing/JCT records and aggregate OnlineResult
 """
 

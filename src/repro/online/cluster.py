@@ -1,33 +1,51 @@
-"""Global cluster timeline: residual capacity for arrival-driven admission.
+"""Global cluster timeline: residual capacity and channel-feasible commits.
 
 The offline engine solves each :class:`~repro.core.instance.ProblemInstance`
 against a *private* resource view (its own racks and subchannels). Online,
 admitted jobs occupy the shared cluster over time, so a newly arrived job
-must be solved against what is actually free. :class:`ClusterTimeline`
-tracks, per physical rack and per physical channel (the wired channel plus
-each wireless subchannel), the time until which the resource is held by
-committed jobs, and constructs **residual-capacity instances**: the same
-DAG, but with ``n_racks`` / ``n_wireless`` clamped to the resources free
-at the admission epoch, together with the local->physical maps needed to
-commit the resulting schedule back onto the shared timeline.
+must be solved against what is actually free, and its committed transfers
+must not overlap other jobs' transfers on the same physical link.
+:class:`ClusterTimeline` therefore tracks two things per physical resource:
 
-Occupancy model: **racks are exclusive** — jobs admitted at the same
-epoch draw disjoint rack grants from a shrinking pool (the service passes
-``rack_pool``), and a committed job holds each granted rack it uses until
-its last task there finishes. **Wireless subchannels are gated across
-epochs** by their hold times (a held subchannel is excluded from later
-residual views) but shared by the jobs of one epoch. **The wired channel
-is never gated**: every job needs it, so it is contended only *within*
-each job's own schedule (the fleet model of
-:func:`repro.core.vectorized.schedule_fleet`, which solves co-admitted
-jobs as independent instances) — cross-job wired contention, at any
-epoch distance, is the model's deliberate approximation, and the
-reported wired utilization is the sum of per-job busy times (it can
-exceed 1 under overlap). With an empty cluster, one admission
-epoch, and total rack demand within the cluster, every job is granted
-exactly its demanded shape, so the online service reduces bit-for-bit to
+* a **hold time** (per rack and per wireless subchannel) — the time until
+  which the resource is granted to a committed job; grants are exclusive,
+  so holds gate admission, and
+* the **busy intervals** of every physical channel — the single wired
+  channel and each wireless subchannel — carrying the exact committed
+  transfer windows of every job, with the owning job id.
+
+Occupancy model: **racks and wireless subchannels are exclusive grants** —
+jobs admitted at the same epoch draw disjoint grants from shrinking pools
+(the service passes ``rack_pool`` / ``wireless_pool``), a committed job
+holds each granted rack until its last task there finishes and each granted
+subchannel until its last transfer there finishes, and held resources are
+excluded from later epochs' residual views. **The wired channel is shared
+by every job** and is never granted; instead every commit passes through
+:meth:`ClusterTimeline.arbitrate` — a deterministic commit-order
+arbitration pass that replays the job's schedule through the host
+simulator (:func:`repro.core.simulator.simulate` with the ``channel_busy``
+hook) against the busy intervals already committed on its physical
+channels. The replay keeps the engine's intra-job decisions (task->rack
+and edge->channel vectors) and only shifts start times, gap-inserting the
+job's transfers around other jobs' — so every committed timeline is
+physically feasible: no two jobs ever overlap on the wired channel or on
+one wireless subchannel (:meth:`ClusterTimeline.assert_feasible` audits
+exactly this), and reported utilizations are true fractions in [0, 1].
+
+When a job's physical channels carry no committed intervals past the
+admission epoch, ``arbitrate`` returns the schedule object unchanged —
+with an empty cluster, one admission epoch, disjoint grants and no
+cross-job wired traffic, the online service still reduces bit-for-bit to
 one ``schedule_fleet`` call (locked by ``tests/test_online.py::
 test_degenerate_arrivals_match_schedule_fleet``).
+
+Float semantics: holds are recorded at exact float completion times and
+``free_racks`` / ``free_wireless`` use an exact ``hold <= t`` comparison —
+a resource released at exactly ``t`` is re-grantable at ``t``, while an
+in-flight hold any amount past ``t`` (even within the old ``_EPS``
+tolerance window) is busy, so back-to-back admissions can never
+double-book (regression-locked in ``tests/test_online.py``). ``_EPS`` is
+kept only as the audit's overlap tolerance.
 """
 
 from __future__ import annotations
@@ -38,10 +56,13 @@ import numpy as np
 
 from repro.core.instance import CH_WIRED, ProblemInstance
 from repro.core.schedule import Schedule
+from repro.core.simulator import simulate
 
 __all__ = ["ClusterTimeline", "ResidualView"]
 
-# Tolerance for "free at t" comparisons on float timelines.
+# Overlap tolerance for the feasibility audit. Grant/release comparisons are
+# exact (see the module docstring); this only absorbs float noise when two
+# independently computed transfer windows abut.
 _EPS = 1e-9
 
 
@@ -51,11 +72,11 @@ class ResidualView:
 
     Attributes:
       inst: the residual instance — the job's DAG with ``n_racks`` =
-        granted racks and ``n_wireless`` = free subchannels (0 when all
+        granted racks and ``n_wireless`` = granted subchannels (0 when all
         are held: the job runs wired-only).
       rack_map: int[granted] physical rack id of each local rack index.
-      wireless_map: int[free_wireless] physical subchannel index (0-based)
-        of each local subchannel index.
+      wireless_map: int[granted_wireless] physical subchannel index
+        (0-based) of each local subchannel index.
       full: True iff the view grants the job's full demanded shape.
     """
 
@@ -66,7 +87,7 @@ class ResidualView:
 
 
 class ClusterTimeline:
-    """Hold-until-free occupancy of one cluster's racks and channels.
+    """Hold-until-free grants plus per-channel busy intervals of one cluster.
 
     Args:
       n_racks: M physical racks.
@@ -82,6 +103,15 @@ class ClusterTimeline:
         self.n_wireless = int(n_wireless)
         self.rack_hold = np.zeros(self.n_racks, dtype=np.float64)
         self.wireless_hold = np.zeros(self.n_wireless, dtype=np.float64)
+        # Committed occupancy, (start, end, job_id) in absolute time, in
+        # commit order (starts need not be sorted across jobs).
+        self.rack_intervals: list[list[tuple[float, float, int]]] = [
+            [] for _ in range(self.n_racks)
+        ]
+        self.wired_intervals: list[tuple[float, float, int]] = []
+        self.wireless_intervals: list[list[tuple[float, float, int]]] = [
+            [] for _ in range(self.n_wireless)
+        ]
         # Busy-time accumulators for utilization metrics.
         self.rack_busy_time = 0.0
         self.wired_busy_time = 0.0
@@ -91,35 +121,37 @@ class ClusterTimeline:
     # -- residual capacity ---------------------------------------------------
 
     def free_racks(self, t: float) -> np.ndarray:
-        """Physical rack ids free at time ``t`` (ascending)."""
-        return np.nonzero(self.rack_hold <= t + _EPS)[0]
+        """Physical rack ids free at time ``t`` (ascending, exact release)."""
+        return np.nonzero(self.rack_hold <= t)[0]
 
     def free_wireless(self, t: float) -> np.ndarray:
         """Physical wireless subchannel indices free at time ``t``."""
-        return np.nonzero(self.wireless_hold <= t + _EPS)[0]
+        return np.nonzero(self.wireless_hold <= t)[0]
 
     def residual_view(
         self,
         inst: ProblemInstance,
         t: float,
         rack_pool: np.ndarray | None = None,
+        wireless_pool: np.ndarray | None = None,
     ) -> ResidualView | None:
         """Residual-capacity instance for ``inst`` at epoch ``t``.
 
-        Grants ``min(inst.n_racks, |pool|)`` racks — the lowest-id entries
-        of ``rack_pool``, or of the free set at ``t`` when no pool is
-        given (the service passes a shrinking pool so racks granted within
-        one epoch are mutually exclusive) — and every free wireless
-        subchannel up to the job's demand (subchannels are shared by jobs
-        of one epoch, like the wired channel; only cross-epoch holds gate
-        them). Returns ``None`` when the pool is empty — the job cannot
-        be admitted at this epoch.
+        Grants ``min(inst.n_racks, |rack_pool|)`` racks and
+        ``min(inst.n_wireless, |wireless_pool|)`` wireless subchannels —
+        the lowest-id entries of each pool, or of the free sets at ``t``
+        when no pool is given. The service passes shrinking pools so that
+        resources granted within one epoch are mutually exclusive, for
+        racks and subchannels alike. Returns ``None`` when the rack pool
+        is empty — the job cannot be admitted at this epoch.
         """
         free_r = self.free_racks(t) if rack_pool is None else np.asarray(rack_pool)
         if free_r.size == 0:
             return None
         granted = free_r[: inst.n_racks]
-        free_w = self.free_wireless(t)[: inst.n_wireless]
+        free_w = (
+            self.free_wireless(t) if wireless_pool is None else np.asarray(wireless_pool)
+        )[: inst.n_wireless]
         residual = ProblemInstance(
             job=inst.job,
             n_racks=int(granted.size),
@@ -136,17 +168,62 @@ class ClusterTimeline:
             full=bool(full),
         )
 
+    # -- cross-job arbitration ----------------------------------------------
+
+    def channel_busy(self, view: ResidualView, t: float) -> dict:
+        """Committed busy intervals on ``view``'s physical channels, mapped
+        into the view's local frame (channel ids CH_WIRED / 2+k, times
+        relative to ``t``). Intervals ending at or before ``t`` are
+        dropped; an interval straddling ``t`` keeps its negative-start
+        tail (the simulator's gap search handles it). Channels with no
+        remaining intervals are omitted, so an empty dict certifies the
+        job's channels are clear from ``t`` on.
+        """
+        busy: dict[int, list[tuple[float, float]]] = {}
+        wired = [(s - t, e - t) for s, e, _ in self.wired_intervals if e > t]
+        if wired:
+            busy[CH_WIRED] = wired
+        for k in range(view.inst.n_wireless):
+            phys = int(view.wireless_map[k])
+            ivs = [(s - t, e - t) for s, e, _ in self.wireless_intervals[phys] if e > t]
+            if ivs:
+                busy[2 + k] = ivs
+        return busy
+
+    def arbitrate(self, view: ResidualView, sched: Schedule, t: float) -> Schedule:
+        """Sequence ``sched`` onto the shared physical channels at ``t``.
+
+        The cross-job arbitration pass: replays the schedule through the
+        host simulator with the busy intervals already committed on the
+        job's physical channels, keeping the engine's task->rack and
+        edge->channel decisions and re-deriving exact start times (the
+        job's transfers gap-insert around other jobs'). Deterministic for
+        a fixed commit order, and the identity when the job's channels
+        carry no committed intervals past ``t`` — so an uncontended
+        commit stays bit-for-bit the engine's schedule.
+        """
+        busy = self.channel_busy(view, t)
+        if not busy:
+            return sched
+        return simulate(view.inst, sched.rack, chan=sched.chan, channel_busy=busy)
+
     # -- commit --------------------------------------------------------------
 
-    def commit(self, view: ResidualView, sched: Schedule, t: float) -> float:
+    def commit(
+        self, view: ResidualView, sched: Schedule, t: float, job_id: int = -1
+    ) -> float:
         """Place ``sched`` (solved in the residual view's local frame,
         relative time 0) onto the cluster starting at absolute time ``t``.
 
-        Each rack the job uses is held until the job's last task on it
-        finishes, and each used wireless subchannel until the job's last
-        transfer on it finishes; wired-channel usage only accumulates
-        busy time (it never gates admission — see the module docstring).
-        Returns the job's absolute completion time (``t + makespan``).
+        Each granted rack the job uses is held until the job's last task
+        on it finishes, and each granted wireless subchannel until the
+        job's last transfer on it finishes; every transfer's exact window
+        is recorded on its physical channel (the wired channel included).
+        The caller is responsible for channel feasibility — pass the
+        schedule through :meth:`arbitrate` first when the cluster is not
+        empty; :meth:`assert_feasible` audits the invariant after the
+        fact. Returns the job's absolute completion time
+        (``t + makespan``).
         """
         inst = view.inst
         job = inst.job
@@ -159,32 +236,64 @@ class ClusterTimeline:
             phys = int(view.rack_map[i])
             self.rack_hold[phys] = max(self.rack_hold[phys], t + fin)
             self.rack_busy_time += float(np.sum(job.p[on_i]))
+            for s, p in zip(sched.start[on_i], job.p[on_i]):
+                if p > 0:
+                    self.rack_intervals[phys].append((t + s, t + s + p, job_id))
         if job.n_edges:
-            wired = sched.chan == CH_WIRED
-            if wired.any():
-                self.wired_busy_time += float(np.sum(dur[wired]))
-            for k in range(inst.n_wireless):
-                on_k = sched.chan == 2 + k
-                if not on_k.any():
-                    continue
-                fin = float(np.max(sched.tstart[on_k] + dur[on_k]))
-                phys = int(view.wireless_map[k])
-                self.wireless_hold[phys] = max(self.wireless_hold[phys], t + fin)
-                self.wireless_busy_time += float(np.sum(dur[on_k]))
+            for e in range(job.n_edges):
+                c, d = int(sched.chan[e]), float(dur[e])
+                if d <= 0.0:
+                    continue  # zero-size transfers occupy nothing
+                s = float(sched.tstart[e])
+                if c == CH_WIRED:
+                    self.wired_intervals.append((t + s, t + s + d, job_id))
+                    self.wired_busy_time += d
+                elif c >= 2:
+                    phys = int(view.wireless_map[c - 2])
+                    self.wireless_intervals[phys].append((t + s, t + s + d, job_id))
+                    self.wireless_hold[phys] = max(
+                        self.wireless_hold[phys], t + s + d
+                    )
+                    self.wireless_busy_time += d
         completion = t + sched.makespan
         self.last_completion = max(self.last_completion, completion)
         return completion
 
+    # -- feasibility audit ---------------------------------------------------
+
+    def assert_feasible(self, tol: float = _EPS) -> None:
+        """Audit the committed timeline: no two committed operations may
+        overlap on the same physical resource — tasks on a rack, transfers
+        on the wired channel, transfers on one wireless subchannel —
+        regardless of which jobs they belong to. Raises ``AssertionError``
+        naming the resource and the two owning jobs on the first overlap.
+        """
+
+        def check(label: str, intervals: list[tuple[float, float, int]]) -> None:
+            ordered = sorted(intervals)
+            for (s0, e0, j0), (s1, _e1, j1) in zip(ordered, ordered[1:]):
+                if s1 < e0 - tol:
+                    raise AssertionError(
+                        f"{label}: committed intervals of job {j0} "
+                        f"[{s0}, {e0}) and job {j1} [{s1}, ...) overlap"
+                    )
+
+        for i, ivs in enumerate(self.rack_intervals):
+            check(f"rack {i}", ivs)
+        check("wired channel", self.wired_intervals)
+        for k, ivs in enumerate(self.wireless_intervals):
+            check(f"wireless subchannel {k}", ivs)
+
     # -- metrics -------------------------------------------------------------
 
     def utilization(self, horizon: float) -> dict[str, float]:
-        """Busy-time fractions over ``[0, horizon]``. Rack and wireless
-        figures are exact under their exclusivity rules; the wired figure
-        sums per-job busy times and can exceed 1 when concurrent jobs'
-        wired transfers overlap (see the module docstring)."""
+        """Busy-time fractions over ``[0, horizon]``. All three figures are
+        exact under the channel-feasible commit model and guaranteed to be
+        true fractions in [0, 1] (asserted — committed occupancy of a
+        unary resource cannot exceed the horizon)."""
         if horizon <= 0.0:
             return {"rack": 0.0, "wired": 0.0, "wireless": 0.0}
-        return {
+        util = {
             "rack": self.rack_busy_time / (self.n_racks * horizon),
             "wired": self.wired_busy_time / horizon,
             "wireless": (
@@ -193,4 +302,9 @@ class ClusterTimeline:
                 else 0.0
             ),
         }
-
+        for name, frac in util.items():
+            assert -1e-12 <= frac <= 1.0 + 1e-9, (
+                f"{name} utilization {frac} outside [0, 1]: committed "
+                "timeline is not channel-feasible"
+            )
+        return {name: min(max(frac, 0.0), 1.0) for name, frac in util.items()}

@@ -12,8 +12,12 @@ throughput / candidate counters used by the serving benchmarks.
 from __future__ import annotations
 
 import dataclasses
+import typing
 
 import numpy as np
+
+if typing.TYPE_CHECKING:  # pragma: no cover - type-only import
+    from repro.online.cluster import ClusterTimeline
 
 __all__ = ["JobMetrics", "OnlineResult"]
 
@@ -28,11 +32,19 @@ class JobMetrics:
       arrival: absolute arrival time.
       admitted: absolute admission epoch (start of execution).
       completion: absolute completion time.
-      makespan: the committed schedule's makespan (execution time).
+      makespan: the committed (channel-arbitrated) schedule's makespan —
+        the job's true execution time on the shared cluster, so
+        ``completion == admitted + makespan`` always.
       n_racks_granted / n_wireless_granted: residual shape the job ran on
         (may be below its demand under contention).
       n_solves: solver invocations for this job (1 + re-optimizations
         while queued; 1 for baseline policies).
+      solver_makespan: the served schedule's makespan as the solver saw it
+        (private resource view, before cross-job arbitration); the gap
+        ``makespan - solver_makespan`` is the job's cross-job channel
+        queueing.
+      backfilled: True when the job overtook a blocked head-of-line job
+        under the service's backfilling admission mode.
       assignment: int64[n_tasks] committed task->rack assignment in
         *physical* rack ids (the residual view's local labels mapped
         through its rack grant).
@@ -47,6 +59,8 @@ class JobMetrics:
     n_racks_granted: int
     n_wireless_granted: int
     n_solves: int
+    solver_makespan: float = float("nan")
+    backfilled: bool = False
     assignment: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, dtype=np.int64)
     )
@@ -79,7 +93,18 @@ class OnlineResult:
       solver_wall: wall-clock seconds spent inside the per-epoch solvers.
       horizon: last completion time (the service makespan).
       rack_utilization / wired_utilization / wireless_utilization:
-        busy-time fractions of the cluster over ``[0, horizon]``.
+        busy-time fractions of the cluster over ``[0, horizon]``; all
+        three are true fractions in [0, 1] under channel-feasible commits.
+      n_backfilled: jobs admitted by overtaking a blocked head-of-line job
+        (0 unless the service runs with ``backfill=True``).
+      n_backfill_rejected: overtake candidates whose commit was refused
+        because arbitration could not prove them harmless (their
+        post-arbitration completion overran the head-of-line
+        reservation); each rejection left the candidate queued.
+      timeline: the committed :class:`~repro.online.cluster
+        .ClusterTimeline` (audited feasible by the service before it
+        returns) — kept for post-hoc inspection and the test-suite
+        feasibility audit.
     """
 
     jobs: list[JobMetrics]
@@ -95,6 +120,9 @@ class OnlineResult:
     rack_utilization: float
     wired_utilization: float
     wireless_utilization: float
+    n_backfilled: int = 0
+    n_backfill_rejected: int = 0
+    timeline: "ClusterTimeline | None" = None
 
     @property
     def jcts(self) -> np.ndarray:
@@ -123,11 +151,21 @@ class OnlineResult:
 
     @property
     def jobs_per_solver_second(self) -> float:
-        """Scheduler throughput: served jobs per second of solver wall time."""
-        return len(self.jobs) / self.solver_wall if self.solver_wall > 0 else 0.0
+        """Scheduler throughput: served jobs per second of solver wall time.
+
+        A zero-cost policy (e.g. a heuristic baseline whose per-job wall
+        time is below timer resolution) has *infinite* throughput, not
+        zero — returned as ``inf`` so benchmark tables sort it above, not
+        below, every engine configuration. An empty result is 0.0.
+        """
+        if self.solver_wall > 0:
+            return len(self.jobs) / self.solver_wall
+        return float("inf") if self.jobs else 0.0
 
     def summary(self) -> str:
         """One-line human summary (used by the example and benchmarks)."""
+        jps = self.jobs_per_solver_second
+        jps_s = f"{jps:.2f}" if np.isfinite(jps) else "inf"
         return (
             f"policy={self.policy} warm={self.warm_start} jobs={len(self.jobs)} "
             f"mean_jct={self.mean_jct:.1f} p95_jct={self.p95_jct:.1f} "
@@ -137,6 +175,7 @@ class OnlineResult:
             f"{self.rack_utilization:.2f}/{self.wired_utilization:.2f}/"
             f"{self.wireless_utilization:.2f} "
             f"epochs={self.n_epochs} solves={self.n_solves} "
+            f"backfilled={self.n_backfilled} "
             f"pruned={self.n_pruned}/{self.n_candidates} "
-            f"solver_wall={self.solver_wall:.2f}s"
+            f"jobs_per_solver_s={jps_s} solver_wall={self.solver_wall:.2f}s"
         )

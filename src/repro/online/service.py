@@ -11,12 +11,29 @@ The event loop turns the offline mega-batch engine
      lockstep driver and the fused §IV-A stage-1 pruner are shared across
      the batch and compiled programs are reused across epochs (fleets in
      the same size bucket retrace nothing).
-  2. **Residual capacity.** Each job is solved against the cluster's
-     residual view at the epoch (:class:`repro.online.cluster
-     .ClusterTimeline`): the racks and wireless subchannels not held by
-     previously committed jobs. Committed schedules hold their resources
-     until their last use, and completions wake the loop to admit queued
-     work.
+  2. **Residual capacity and channel-feasible commits.** Each job is
+     solved against the cluster's residual view at the epoch
+     (:class:`repro.online.cluster.ClusterTimeline`): racks and wireless
+     subchannels not held by previously committed jobs, drawn from
+     shrinking per-epoch pools so co-admitted jobs' grants are disjoint.
+     Every commit — fleet policy and baselines alike — passes through the
+     timeline's cross-job arbitration pass, which sequences the job's
+     transfers around the busy intervals already committed on its
+     physical channels (the shared wired channel above all) by replaying
+     the schedule through the host simulator; committed timelines are
+     audited channel-feasible before ``serve`` returns. Completions wake
+     the loop to admit queued work.
+  2b. **Backfilling** (``backfill=True``, an extension of
+     ``preserve_order``): when the head-of-line job is blocked, a later
+     queued job may overtake it only when arbitration *proves* it cannot
+     delay the head-of-line admission — either the candidate's
+     post-arbitration completion lands by the head job's resource
+     reservation (the earliest time its demanded racks/subchannels can
+     all be free, so everything the candidate touches is released again
+     in time), or, shadow slack, the reservation keeps enough free
+     resources for the head job even with the candidate's grant removed
+     for good. A candidate that cannot prove either stays queued (its
+     solve still feeds the warm-start incumbents).
   3. **Warm-started re-optimization.** A job that cannot be admitted
      (no free rack, or fewer than ``min_free_racks``) stays queued, but is
      still *planned* in the epoch's mega-batch against its full demanded
@@ -38,14 +55,18 @@ Consequence: a cold-start arm's committed result for job ``j`` is the
 deterministic unseeded solve ``R_j`` (its admission solve ignores queue
 history), and a warm arm's chain *starts* at exactly ``R_j`` (the first
 solve has no incumbents yet and shares its seed) — so keep-incumbent
-re-optimization makes the warm arm's committed makespan provably <= the
-cold arm's for every job whose admitted shape matches its planning shape
-(e.g. under ``require_full_demand``).
+re-optimization makes the warm arm's served *solver* makespan provably
+<= the cold arm's for every job whose admitted shape matches its
+planning shape (e.g. under ``require_full_demand``). The post-arbitration
+completion additionally depends on the other jobs sharing the physical
+channels, so the per-job guarantee is on the served schedule, not on the
+cross-job channel queueing around it.
 
 Degenerate reduction (locked by ``tests/test_online.py``): with every job
-arriving at t=0, ``window=0`` and an empty cluster, the single epoch's
-batch is exactly a direct ``schedule_fleet`` call — per-job assignments
-and JCTs are bit-for-bit identical.
+arriving at t=0, ``window=0``, an empty cluster granting every job its
+full demanded shape, and no cross-job traffic on the shared wired
+channel, the single epoch's batch is exactly a direct ``schedule_fleet``
+call — per-job assignments and JCTs are bit-for-bit identical.
 """
 
 from __future__ import annotations
@@ -65,8 +86,6 @@ from repro.online.metrics import JobMetrics, OnlineResult
 from repro.online.workload import ArrivalEvent
 
 __all__ = ["OnlineScheduler", "DEFAULT_SOLVER_KWARGS"]
-
-_EPS = 1e-9
 
 # Engine budget per epoch solve. Deliberately lighter than the offline
 # defaults: a serving epoch re-optimizes often, so per-solve budget trades
@@ -143,6 +162,16 @@ class OnlineScheduler:
         job that does not fit blocks everything behind it (head-of-line
         FIFO, no overtaking). Keeps service trajectories stable under
         small makespan perturbations, at the cost of some utilization.
+      backfill: relax ``preserve_order`` head-of-line blocking with
+        conservative (EASY-style) backfilling: a queued job behind the
+        blocked head-of-line job may be admitted out of order only when
+        its *post-arbitration* completion lands at or before the head
+        job's resource reservation — the earliest time the head job's
+        demanded racks and subchannels can all be free given the current
+        holds — so every resource the overtaker touches is released by
+        then and the head-of-line admission epoch is provably never
+        delayed. Requires ``preserve_order=True`` (without it every
+        fitting job may overtake anyway). Ignored by ``fifo_solo``.
       seed: master seed for the per-solve engine seeds (see module
         docstring for the exact derivation).
       seed_pool_size: incumbents remembered per queued job.
@@ -161,6 +190,7 @@ class OnlineScheduler:
         min_free_racks: int = 1,
         require_full_demand: bool = False,
         preserve_order: bool = False,
+        backfill: bool = False,
         seed: int = 0,
         seed_pool_size: int = 4,
         solver_kwargs: dict | None = None,
@@ -174,6 +204,12 @@ class OnlineScheduler:
             raise ValueError("window must be non-negative")
         if not 1 <= min_free_racks <= n_racks:
             raise ValueError("min_free_racks must be in [1, n_racks]")
+        if backfill and not preserve_order:
+            raise ValueError(
+                "backfill extends preserve_order head-of-line admission; "
+                "set preserve_order=True (without it any fitting job may "
+                "overtake already)"
+            )
         self.n_racks = int(n_racks)
         self.n_wireless = int(n_wireless)
         self.window = float(window)
@@ -182,6 +218,7 @@ class OnlineScheduler:
         self.min_free_racks = int(min_free_racks)
         self.require_full_demand = bool(require_full_demand)
         self.preserve_order = bool(preserve_order)
+        self.backfill = bool(backfill)
         self.seed = int(seed)
         self.seed_pool_size = int(seed_pool_size)
         self.solver_kwargs = dict(DEFAULT_SOLVER_KWARGS)
@@ -200,8 +237,16 @@ class OnlineScheduler:
         counters = {
             "epochs": 0, "batches": 0, "solves": 0,
             "candidates": 0, "pruned": 0, "wall": 0.0,
+            "backfilled": 0, "backfill_rejected": 0,
         }
 
+        # Wakeup comparisons are exact (no epsilon): holds are recorded at
+        # exact float completion times and the free-resource queries use the
+        # same ``hold <= t`` rule, so a completion popped at epoch ``t``
+        # guarantees its resources are re-grantable at ``t``, while a
+        # completion any amount past ``t`` stays in the heap for its own
+        # epoch instead of being consumed early against still-held
+        # resources (the _EPS double-booking regression).
         i = 0
         while i < len(arrivals) or pending:
             t_arr = arrivals[i].time + self.window if i < len(arrivals) else np.inf
@@ -212,10 +257,10 @@ class OnlineScheduler:
                     "online event loop deadlocked: jobs queued with no "
                     "outstanding completion or arrival to wake on"
                 )
-            while i < len(arrivals) and arrivals[i].time <= t + _EPS:
+            while i < len(arrivals) and arrivals[i].time <= t:
                 pending.append(_PendingJob(arrivals[i]))
                 i += 1
-            while completions and completions[0] <= t + _EPS:
+            while completions and completions[0] <= t:
                 heapq.heappop(completions)
             counters["epochs"] += 1
             admitted = self._process_epoch(
@@ -224,6 +269,7 @@ class OnlineScheduler:
             for comp in admitted:
                 heapq.heappush(completions, comp)
 
+        cluster.assert_feasible()
         records.sort(key=lambda r: r.job_id)
         horizon = cluster.last_completion
         util = cluster.utilization(horizon)
@@ -241,6 +287,9 @@ class OnlineScheduler:
             rack_utilization=util["rack"],
             wired_utilization=util["wired"],
             wireless_utilization=util["wireless"],
+            n_backfilled=counters["backfilled"],
+            n_backfill_rejected=counters["backfill_rejected"],
+            timeline=cluster,
         )
 
     # -- epoch processing ----------------------------------------------------
@@ -251,6 +300,61 @@ class OnlineScheduler:
 
     def _admissible(self, cluster: ClusterTimeline, t: float) -> bool:
         return cluster.free_racks(t).size >= self.min_free_racks
+
+    def _hol_need(self, inst) -> tuple[int, int]:
+        """Racks and wireless subchannels a blocked head-of-line job needs
+        free before it can be admitted (demands clamped to the cluster)."""
+        need_r = self.min_free_racks
+        need_w = 0
+        if self.require_full_demand:
+            need_r = max(need_r, min(inst.n_racks, self.n_racks))
+            need_w = min(inst.n_wireless, self.n_wireless)
+        return need_r, need_w
+
+    def _backfill_safe(
+        self,
+        cluster: ClusterTimeline,
+        view: ResidualView,
+        completion: float,
+        t: float,
+        hol_need: tuple[int, int],
+    ) -> bool:
+        """Prove (or refuse) that committing a backfill candidate cannot
+        delay the blocked head-of-line job's admission epoch.
+
+        The head job's *reservation* is the earliest time its needed racks
+        and subchannels can all be free given the holds committed so far —
+        including this epoch's earlier commits, which is why the proof
+        runs at commit time, on current holds, per candidate. The commit
+        is safe when either
+
+        * the candidate's post-arbitration ``completion`` lands at or
+          before the reservation (every hold a job takes — racks and
+          channels alike — is released by its completion, so everything
+          the candidate touches is free again in time), or
+        * shadow slack: even with the candidate's grant removed for good,
+          the reservation time still has enough free racks/subchannels
+          for the head job (its demand is met without the candidate's
+          resources, so the candidate may run arbitrarily long).
+
+        Either branch preserves the invariant that at the current
+        reservation the head job's demand is satisfiable, so the head job
+        is admitted at the first wakeup past it — exactly as it would be
+        with no overtaking (backfill completions only *add* wakeups)."""
+        need_r, need_w = hol_need
+        t_res = max(t, float(np.sort(cluster.rack_hold)[need_r - 1]))
+        if need_w:
+            t_res = max(t_res, float(np.sort(cluster.wireless_hold)[need_w - 1]))
+        if completion <= t_res:
+            return True
+        free_r = int(np.sum(cluster.rack_hold <= t_res))
+        if free_r - view.inst.n_racks < need_r:
+            return False
+        if need_w:
+            free_w = int(np.sum(cluster.wireless_hold <= t_res))
+            if free_w - view.inst.n_wireless < need_w:
+                return False
+        return True
 
     def _process_epoch(
         self,
@@ -263,6 +367,7 @@ class OnlineScheduler:
         """Admit / plan the queue at epoch ``t``; returns new completions."""
         if not pending:
             return []
+        hol_need = None  # head-of-line protection bound for backfills
         if self.policy == "fifo_solo":
             # Solo rule: head-of-line job only, and only on a fully idle
             # cluster (every rack free implies every channel free too —
@@ -271,38 +376,54 @@ class OnlineScheduler:
                 return []
             admit, plan = pending[:1], []
             views = [cluster.residual_view(admit[0].event.inst, t)]
+            is_backfill = [False]
         else:
-            # Racks granted within one epoch are mutually exclusive:
-            # each admitted job consumes its grant from a shrinking pool,
-            # so later jobs of the epoch see only what is left. Wireless
-            # subchannels are shared within the epoch (cross-job channel
-            # contention is the fleet model's approximation) and gated
-            # only by cross-epoch holds.
+            # Racks AND wireless subchannels granted within one epoch are
+            # mutually exclusive: each admitted job consumes its grant
+            # from a shrinking pool, so later jobs of the epoch see only
+            # what is left. The shared wired channel is never granted —
+            # cross-job wired contention is resolved at commit time by the
+            # timeline's arbitration pass.
             pool = cluster.free_racks(t)
-            n_free_w = cluster.free_wireless(t).size
-            admit, plan, views = [], [], []
+            pool_w = cluster.free_wireless(t)
+            admit, plan, views, is_backfill = [], [], [], []
+            blocked = False  # head-of-line blocked (order-preserving modes)
             for p in pending:
+                inst = p.event.inst
                 ok = pool.size >= self.min_free_racks
                 if ok and self.require_full_demand:
                     # Demands are clamped to the cluster shape so an
                     # oversized job can still (eventually) be admitted.
                     ok = (
-                        pool.size >= min(p.event.inst.n_racks, self.n_racks)
-                        and n_free_w
-                        >= min(p.event.inst.n_wireless, self.n_wireless)
+                        pool.size >= min(inst.n_racks, self.n_racks)
+                        and pool_w.size >= min(inst.n_wireless, self.n_wireless)
                     )
-                if self.preserve_order and plan:
+                overtakes = self.preserve_order and blocked
+                if overtakes and not self.backfill:
                     ok = False  # head-of-line blocking: no overtaking
                 if ok:
-                    view = cluster.residual_view(p.event.inst, t, rack_pool=pool)
+                    view = cluster.residual_view(
+                        inst, t, rack_pool=pool, wireless_pool=pool_w
+                    )
                     pool = pool[view.inst.n_racks :]
+                    pool_w = pool_w[view.inst.n_wireless :]
                     admit.append(p)
                     views.append(view)
+                    # An overtaker is only a *candidate*: its commit below
+                    # must pass the head-of-line no-delay proof
+                    # (``_backfill_safe``) or it stays queued (the racks
+                    # it consumed from the pool stay unused this epoch —
+                    # conservative and deterministic).
+                    is_backfill.append(overtakes)
                 else:
+                    if self.preserve_order and not blocked:
+                        blocked = True
+                        hol_need = self._hol_need(inst)
                     plan.append(p)
         assert all(v is not None for v in views)
 
         new_completions: list[float] = []
+        committed: list[_PendingJob] = []
         if self.policy == "fleet":
             # Queued ("plan") jobs are re-solved every epoch in BOTH warm
             # and cold modes: cold-start re-optimization means searching
@@ -339,7 +460,7 @@ class OnlineScheduler:
                 p.remember(
                     res, (inst.n_racks, inst.n_wireless), self.seed_pool_size
                 )
-            for p, view, res in zip(admit, views, fleet.results):
+            for p, view, bf, res in zip(admit, views, is_backfill, fleet.results):
                 sched, mk = res.schedule, res.makespan
                 if (
                     self.warm_start
@@ -351,24 +472,60 @@ class OnlineScheduler:
                     # not beat the chain's best simulated schedule for
                     # this exact resource shape, so serve the incumbent.
                     sched, mk = p.best_sched, p.best_makespan
-                comp = cluster.commit(view, sched, t)
-                records.append(self._record(p, view, t, comp, mk, sched))
+                # Cross-job arbitration: sequence the served schedule onto
+                # the shared physical channels (deterministic commit
+                # order = queue order; identity when the channels are
+                # clear).
+                placed = cluster.arbitrate(view, sched, t)
+                if bf and not self._backfill_safe(
+                    cluster, view, t + placed.makespan, t, hol_need
+                ):
+                    # Arbitration cannot prove the overtake harmless: the
+                    # candidate would hold a resource the head-of-line job
+                    # needs past its reservation. It stays queued; its
+                    # solve already fed the warm-start incumbents above.
+                    counters["backfill_rejected"] += 1
+                    continue
+                comp = cluster.commit(view, placed, t, job_id=p.event.job_id)
+                counters["backfilled"] += bf
+                records.append(self._record(p, view, t, comp, placed, mk, bf))
                 new_completions.append(comp)
+                committed.append(p)
         else:
+            # Online baselines commit through the same feasible path: the
+            # per-job heuristic is handed the busy intervals already
+            # committed on its physical channels and gap-inserts its own
+            # transfers around them (``channel_busy`` seeds the same
+            # timeline machinery the replay uses), so its schedule is
+            # already cross-job arbitrated — committing it directly keeps
+            # the heuristic's placement and skips a redundant replay. The
+            # end-of-serve audit verifies the invariant like everywhere
+            # else.
             fn = ONLINE_BASELINES[self.policy]
-            for p, view in zip(admit, views):
+            for p, view, bf in zip(admit, views, is_backfill):
                 t0 = _time.perf_counter()
-                sched = fn(view.inst, use_wireless=view.inst.n_wireless > 0)
+                placed = fn(
+                    view.inst,
+                    use_wireless=view.inst.n_wireless > 0,
+                    channel_busy=cluster.channel_busy(view, t),
+                )
                 counters["wall"] += _time.perf_counter() - t0
                 counters["solves"] += 1
                 p.n_solves += 1
-                comp = cluster.commit(view, sched, t)
+                if bf and not self._backfill_safe(
+                    cluster, view, t + placed.makespan, t, hol_need
+                ):
+                    counters["backfill_rejected"] += 1
+                    continue
+                comp = cluster.commit(view, placed, t, job_id=p.event.job_id)
+                counters["backfilled"] += bf
                 records.append(
-                    self._record(p, view, t, comp, sched.makespan, sched)
+                    self._record(p, view, t, comp, placed, placed.makespan, bf)
                 )
                 new_completions.append(comp)
+                committed.append(p)
 
-        for p in admit:
+        for p in committed:
             pending.remove(p)
         return new_completions
 
@@ -378,8 +535,9 @@ class OnlineScheduler:
         view: ResidualView,
         t: float,
         comp: float,
-        mk: float,
-        sched: Schedule,
+        placed: Schedule,
+        solver_mk: float,
+        backfilled: bool,
     ) -> JobMetrics:
         return JobMetrics(
             job_id=p.event.job_id,
@@ -387,9 +545,11 @@ class OnlineScheduler:
             arrival=p.event.time,
             admitted=t,
             completion=comp,
-            makespan=mk,
+            makespan=placed.makespan,
             n_racks_granted=view.inst.n_racks,
             n_wireless_granted=view.inst.n_wireless,
             n_solves=p.n_solves,
-            assignment=view.rack_map[np.asarray(sched.rack, dtype=np.int64)],
+            solver_makespan=float(solver_mk),
+            backfilled=bool(backfilled),
+            assignment=view.rack_map[np.asarray(placed.rack, dtype=np.int64)],
         )

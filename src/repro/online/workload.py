@@ -153,6 +153,7 @@ def production_arrivals(
     n_racks: int = 6,
     n_wireless: int = 2,
     min_rack_demand: int = 3,
+    min_wireless_demand: int | None = None,
     wired_rate: float = 1.0,
     wireless_rate: float = 1.0,
 ) -> list[ArrivalEvent]:
@@ -168,15 +169,24 @@ def production_arrivals(
     (rho 1.0 / 1.5) that stresses the shared channels. Each job demands
     between ``min_rack_demand`` and ``n_racks`` racks (uniform), so the
     cluster timeline has real packing decisions; wireless demand is the
-    full ``n_wireless``.
+    full ``n_wireless`` by default, or uniform in
+    ``[min_wireless_demand, n_wireless]`` when that is given (not every
+    production job uses the augmentation links — a spread of wireless
+    demands is what gives exclusive subchannel grants, and backfilling
+    around wireless-heavy head-of-line jobs, real packing decisions).
 
     Returns a time-sorted list of :class:`ArrivalEvent`; same seed =>
-    bit-identical stream.
+    bit-identical stream (the default ``min_wireless_demand=None`` draws
+    nothing extra, so legacy streams are unchanged).
     """
     if rate <= 0:
         raise ValueError("rate must be positive")
     if not 1 <= min_rack_demand <= n_racks:
         raise ValueError("min_rack_demand must be in [1, n_racks]")
+    if min_wireless_demand is not None and not (
+        0 <= min_wireless_demand <= n_wireless
+    ):
+        raise ValueError("min_wireless_demand must be in [0, n_wireless]")
     rng = np.random.default_rng(seed)
     fam_names = tuple(PRODUCTION_FAMILY_WEIGHTS)
     fam_p = np.asarray([PRODUCTION_FAMILY_WEIGHTS[f] for f in fam_names])
@@ -194,10 +204,15 @@ def production_arrivals(
         n_tasks = int(rng.integers(5, 11))
         job = _sample_family_job(rng, family, n_tasks, rho)
         demand = int(rng.integers(min_rack_demand, n_racks + 1))
+        demand_w = (
+            n_wireless
+            if min_wireless_demand is None
+            else int(rng.integers(min_wireless_demand, n_wireless + 1))
+        )
         inst = ProblemInstance(
             job=job,
             n_racks=demand,
-            n_wireless=n_wireless,
+            n_wireless=demand_w,
             wired_rate=wired_rate,
             wireless_rate=wireless_rate,
         )

@@ -26,7 +26,11 @@ FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 RESULTS: list[dict] = []
 
 # BENCH_<name>.json schema version (bump on breaking changes).
-BENCH_SCHEMA = "repro-bench-v1"
+# v2: every result record carries a "kind" discriminator — "timing" for
+# classic us_per_call rows, "stress" for the online stress-lane records
+# (sustained-throughput runs whose metrics carry percentile latencies and
+# the flat-latency ratio).
+BENCH_SCHEMA = "repro-bench-v2"
 
 
 def timer(fn, *args, repeats: int = 3, **kwargs):
@@ -57,11 +61,14 @@ def _parse_derived(derived: str) -> dict:
     return out
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+def emit(
+    name: str, us_per_call: float, derived: str = "", kind: str = "timing"
+) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
     RESULTS.append(
         {
             "name": name,
+            "kind": kind,
             "us_per_call": float(us_per_call),
             "derived": derived,
             "metrics": _parse_derived(derived),
@@ -95,9 +102,11 @@ def write_json(path: str, bench: str, config: dict | None = None) -> None:
     """Flush the accumulated records as a ``BENCH_<name>.json`` document.
 
     Schema: ``{"schema", "bench", "config", "environment", "results"}``
-    where each result is ``{"name", "us_per_call", "derived", "metrics"}``
+    where each result is
+    ``{"name", "kind", "us_per_call", "derived", "metrics"}``
     (``metrics`` is the parsed key=value view of ``derived`` — wall
-    times, JCTs, prune rates, ...).
+    times, JCTs, prune rates, percentile latencies, ...; ``kind``
+    discriminates ``"timing"`` rows from ``"stress"`` records).
     """
     payload = {
         "schema": BENCH_SCHEMA,

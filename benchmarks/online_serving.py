@@ -14,6 +14,16 @@ comparisons that back the tables in ``docs/benchmarks.md``.
                           channel-proven backfilling on a production mix
                           with rack- and wireless-demand spread (per-seed
                           mean JCT + backfill counters; the docs table).
+  run_stress()          — ``--stress``: sustained-throughput lane. Streams
+                          a 100k-arrival production trace through the
+                          O(active) serving core (lazy workload iterator,
+                          periodic interval-index compaction, per-job
+                          records elided, streaming percentile stats) and
+                          *asserts* flat per-epoch commit latency: the
+                          second-half mean must stay within
+                          ``STRESS_LATENCY_RATIO``x of the first-half
+                          mean, else the process exits non-zero (the CI
+                          stress smoke job runs a reduced-scale version).
 
 All JCT/utilization figures are measured under channel-feasible commits
 (cross-job wired/wireless arbitration), so they are NOT comparable to the
@@ -30,7 +40,11 @@ import time
 import numpy as np
 
 from benchmarks.common import FULL, emit
-from repro.online import OnlineScheduler, production_arrivals
+from repro.online import (
+    OnlineScheduler,
+    production_arrivals,
+    stream_production_arrivals,
+)
 
 # Cluster and engine configuration shared by both sections. The engine
 # budget keeps the production-mix jobs (tasks ~ U[5,10]) in the *sampled*
@@ -242,6 +256,79 @@ def run_admission_modes() -> None:
     )
 
 
+# Stress lane configuration: a throughput-oriented serving setup — the
+# greedy-list policy (per-job host heuristic, no engine launches) admits on
+# residual capacity with overtaking, the timeline compacts every
+# STRESS_COMPACT epochs, per-job records are elided, and the workload is a
+# lazily streamed production trace. The flat-latency acceptance bound:
+STRESS_LATENCY_RATIO = 1.5
+STRESS_COMPACT = 8
+STRESS_CLUSTER = dict(n_racks=8, n_wireless=2)
+
+
+def run_stress(n_jobs: int = 100_000, rate: float = 1 / 60, seed: int = 0) -> float:
+    """Sustained-throughput stress lane; returns the flat-latency ratio.
+
+    Serves ``n_jobs`` streamed production arrivals end to end and measures
+    the wall time of every epoch's arbitrate-and-commit stage. With the
+    interval index compacting every ``STRESS_COMPACT`` epochs the
+    steady-state cost depends only on *active* jobs, so the per-epoch
+    commit latency must stay flat: the second-half mean is required to be
+    within ``STRESS_LATENCY_RATIO`` x the first-half mean. Emits one
+    ``kind="stress"`` BENCH record with the streaming p50/p90/p99
+    queueing-delay and JCT percentiles and the peak gauges.
+    """
+    evs = stream_production_arrivals(
+        seed,
+        rate=rate,
+        n_jobs=n_jobs,
+        n_racks=STRESS_CLUSTER["n_racks"],
+        n_wireless=STRESS_CLUSTER["n_wireless"],
+        min_rack_demand=3,
+    )
+    svc = OnlineScheduler(
+        STRESS_CLUSTER["n_racks"],
+        STRESS_CLUSTER["n_wireless"],
+        window=5.0,
+        policy="greedy_list",
+        seed=seed,
+        compact_interval=STRESS_COMPACT,
+        record_jobs=False,
+        track_epoch_latency=True,
+    )
+    t0 = time.perf_counter()
+    res = svc.serve(evs)
+    wall = time.perf_counter() - t0
+    if res.n_jobs != n_jobs:
+        raise RuntimeError(f"stress lane served {res.n_jobs}/{n_jobs} jobs")
+    lat = res.epoch_commit_latency
+    half = len(lat) // 2
+    first = float(np.mean(lat[:half]))
+    second = float(np.mean(lat[half:]))
+    ratio = second / first if first > 0 else float("inf")
+    tl = res.timeline
+    emit(
+        f"online_stress_greedy_list_{n_jobs // 1000}k",
+        1e6 * wall / n_jobs,
+        f"n_jobs={res.n_jobs};n_epochs={res.n_epochs}"
+        f";wall_s={wall:.1f};jobs_per_s={res.n_jobs / wall:.0f}"
+        f";latency_ratio={ratio:.3f}"
+        f";first_half_us={1e6 * first:.1f};second_half_us={1e6 * second:.1f}"
+        f";queue_p50={res.p50_queueing_delay:.1f}"
+        f";queue_p90={res.p90_queueing_delay:.1f}"
+        f";queue_p99={res.p99_queueing_delay:.1f}"
+        f";jct_p50={res.p50_jct:.1f};jct_p90={res.p90_jct:.1f}"
+        f";jct_p99={res.p99_jct:.1f}"
+        f";peak_active={res.peak_active};peak_queue={res.peak_queue_depth}"
+        f";intervals_retained={tl.n_intervals}"
+        f";intervals_compacted={tl.n_compacted}"
+        f";rack_util={res.rack_utilization:.2f}"
+        f";wired_util={res.wired_utilization:.2f}",
+        kind="stress",
+    )
+    return ratio
+
+
 def main(argv=None):
     from benchmarks import common
 
@@ -251,7 +338,39 @@ def main(argv=None):
         action="store_true",
         help="run only the warm-vs-cold and admission-mode sections",
     )
+    parser.add_argument(
+        "--stress",
+        action="store_true",
+        help="run only the sustained-throughput stress lane and assert "
+        "flat per-epoch commit latency",
+    )
+    parser.add_argument(
+        "--stress-jobs",
+        type=int,
+        default=100_000,
+        metavar="N",
+        help="stress-lane stream length (CI smoke uses a reduced scale)",
+    )
     args = parser.parse_args(argv)
+    if args.stress:
+        ratio = run_stress(n_jobs=args.stress_jobs)
+        if args.json:
+            common.write_json(
+                args.json,
+                bench="online_serving_stress",
+                config={"n_jobs": args.stress_jobs},
+            )
+        if ratio > STRESS_LATENCY_RATIO:
+            raise SystemExit(
+                f"flat-latency check FAILED: second-half mean commit latency "
+                f"{ratio:.3f}x first-half (bound {STRESS_LATENCY_RATIO}x)"
+            )
+        print(
+            f"flat-latency check passed: {ratio:.3f}x <= "
+            f"{STRESS_LATENCY_RATIO}x",
+            flush=True,
+        )
+        return
     if not args.skip_sweep:
         run()
     run_warm_vs_cold()

@@ -3,12 +3,18 @@ jobs arrive over time, queue for residual cluster capacity, and are
 (re-)optimized in windowed `schedule_fleet` mega-batches. Queued jobs are
 re-planned every epoch with warm-started search (incumbent seed pools +
 keep-incumbent commits), and the same trace is replayed under the online
-FIFO-solo and greedy-list baselines for comparison.
+FIFO-solo and greedy-list baselines for comparison. A final O(active)
+pass re-serves the trace from a lazy arrival stream with interval-index
+compaction and streaming-only stats — bit-identical JCTs, O(1) memory.
 
 Run:  PYTHONPATH=src python examples/serve_jobs.py
 """
 
-from repro.online import OnlineScheduler, production_arrivals
+from repro.online import (
+    OnlineScheduler,
+    production_arrivals,
+    stream_production_arrivals,
+)
 
 CLUSTER = dict(n_racks=6, n_wireless=2)
 SOLVER = dict(
@@ -44,7 +50,14 @@ def main() -> None:
             f"{j.jct:7.1f}  ({j.n_solves} solve{'s' if j.n_solves > 1 else ''})"
         )
     print(f"\nfleet (warm): {res.summary()}")
-    res.timeline.assert_feasible()  # committed timeline is channel-feasible
+    print(
+        f"    queue p50/p90/p99 = {res.p50_queueing_delay:.1f}/"
+        f"{res.p90_queueing_delay:.1f}/{res.p99_queueing_delay:.1f}, "
+        f"jct p50/p90/p99 = {res.p50_jct:.1f}/{res.p90_jct:.1f}/"
+        f"{res.p99_jct:.1f}, peak active {res.peak_active}, "
+        f"peak queue {res.peak_queue_depth}"
+    )
+    res.timeline.assert_feasible(full=True)  # committed timeline is channel-feasible
 
     # Channel-proven backfilling: overtake the blocked head-of-line job
     # only when arbitration proves its admission epoch cannot slip.
@@ -68,6 +81,22 @@ def main() -> None:
             f"(+{100 * (base.mean_jct / res.mean_jct - 1):.1f}% vs fleet), "
             f"p95 {base.p95_jct:.1f}, queue {base.mean_queueing_delay:.1f}"
         )
+
+    # O(active) serving: same trace as a lazy stream, compaction on,
+    # per-job records elided — the committed schedule is bit-identical.
+    stream = stream_production_arrivals(
+        seed=0, rate=1 / 40, n_jobs=10, min_rack_demand=4, **CLUSTER
+    )
+    lean = OnlineScheduler(
+        CLUSTER["n_racks"], CLUSTER["n_wireless"], warm_start=True,
+        compact_interval=4, record_jobs=False, **service,
+    ).serve(stream)
+    assert abs(lean.mean_jct - res.mean_jct) < 1e-9
+    print(
+        f"   streaming: mean JCT {lean.mean_jct:7.1f} (bit-identical), "
+        f"{lean.timeline.n_compacted} intervals compacted, "
+        f"{lean.timeline.n_intervals} retained"
+    )
 
 
 if __name__ == "__main__":

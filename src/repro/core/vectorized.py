@@ -827,6 +827,7 @@ def _run_fleet(
     strategies=None,
     refine_patience: int | None = None,
     seed_pools=None,
+    op_tables=None,
 ):
     """Lockstep fleet driver: one mega-batch launch geometry per stage.
 
@@ -836,7 +837,8 @@ def _run_fleet(
     fragments the candidate streams.
     """
     I = len(instances)
-    op_tables = [build_op_tables(inst) for inst in instances]
+    if op_tables is None:
+        op_tables = [build_op_tables(inst) for inst in instances]
     dims = _fleet_dims(instances, use_wireless, op_tables)
     eval_tables = _build_eval_stack(instances, dims, use_wireless, op_tables)
     lb_args = _build_lb_arrays(instances, dims) if use_kernel else None
@@ -1136,6 +1138,7 @@ def schedule_fleet(
     strategies=None,
     refine_patience: int | None = None,
     seed_pools=None,
+    op_tables=None,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of instances in one padded mega-batch.
 
@@ -1159,6 +1162,12 @@ def schedule_fleet(
         ``None`` or int[S, n_tasks]; see ``seed_pool`` on
         :func:`vectorized_search`). The online serving layer uses this to
         re-optimize still-queued jobs from their incumbent assignments.
+      op_tables: ``None``, or one prebuilt
+        :class:`~repro.core.simulator.OpTables` per instance. Tables
+        depend only on ``inst.job``, so a caller that re-solves the same
+        jobs across epochs (the online service) can build each job's
+        tables once and skip the per-launch rebuild; passing ``None``
+        builds them here. Results are bit-identical either way.
       (remaining arguments: see :func:`vectorized_search`.)
 
     Determinism / solo equivalence: with the same seed and parameters,
@@ -1191,6 +1200,8 @@ def schedule_fleet(
             raise ValueError("one seed per instance required")
     if seed_pools is not None and len(seed_pools) != len(instances):
         raise ValueError("one seed pool (or None) per instance required")
+    if op_tables is not None and len(op_tables) != len(instances):
+        raise ValueError("one OpTables per instance required")
     results, stats = _run_fleet(
         instances,
         max_enumerate=max_enumerate,
@@ -1206,6 +1217,7 @@ def schedule_fleet(
         strategies=strategies,
         refine_patience=refine_patience,
         seed_pools=seed_pools,
+        op_tables=op_tables,
     )
     return FleetResult(
         results=results,

@@ -18,12 +18,14 @@ Layers:
 """
 
 from repro.online.cluster import ClusterTimeline, ResidualView
-from repro.online.metrics import JobMetrics, OnlineResult
+from repro.online.metrics import JobMetrics, OnlineResult, StreamingSeries
 from repro.online.service import DEFAULT_SOLVER_KWARGS, OnlineScheduler
 from repro.online.workload import (
     ArrivalEvent,
     poisson_arrivals,
     production_arrivals,
+    stream_poisson_arrivals,
+    stream_production_arrivals,
     trace_arrivals,
 )
 
@@ -35,7 +37,10 @@ __all__ = [
     "OnlineResult",
     "OnlineScheduler",
     "ResidualView",
+    "StreamingSeries",
     "poisson_arrivals",
     "production_arrivals",
+    "stream_poisson_arrivals",
+    "stream_production_arrivals",
     "trace_arrivals",
 ]

@@ -32,6 +32,29 @@ physically feasible: no two jobs ever overlap on the wired channel or on
 one wireless subchannel (:meth:`ClusterTimeline.assert_feasible` audits
 exactly this), and reported utilizations are true fractions in [0, 1].
 
+Interval index (the O(active) serving core): every per-resource interval
+list is maintained **sorted by start** with ``bisect.insort``. Committed
+intervals on one resource are pairwise disjoint (the feasibility
+invariant), so their end times are sorted too, and
+:meth:`ClusterTimeline.channel_busy` answers "which intervals end after
+``t``" with one bisect on the end column — O(log n + hits) instead of a
+full-history scan. :meth:`ClusterTimeline.compact` retires intervals
+ending at or before a frontier ``t``: epochs are monotone and every
+residual/busy query at ``t' >= t`` drops such intervals anyway, so
+compaction is *observationally identical* — busy-time accumulators were
+already charged at commit, holds are untouched, and ``channel_busy`` /
+``arbitrate`` / ``utilization`` return bit-identical answers (the
+equivalence property is locked by ``tests/test_online_scale.py``). After
+compaction the steady-state cost of every timeline operation depends only
+on the intervals of *active* jobs, not on the full arrival history.
+
+The feasibility audit is incremental on the same index: commits buffer
+their new intervals, and :meth:`assert_feasible` checks only those against
+their sorted neighbors (``full=True`` rescans every retained interval from
+scratch — the test-suite escape hatch). :meth:`compact` audits the pending
+buffer before dropping anything, so no committed interval is ever retired
+unaudited.
+
 When a job's physical channels carry no committed intervals past the
 admission epoch, ``arbitrate`` returns the schedule object unchanged —
 with an empty cluster, one admission epoch, disjoint grants and no
@@ -50,7 +73,9 @@ kept only as the audit's overlap tolerance.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
+import operator
 
 import numpy as np
 
@@ -64,6 +89,11 @@ __all__ = ["ClusterTimeline", "ResidualView"]
 # exact (see the module docstring); this only absorbs float noise when two
 # independently computed transfer windows abut.
 _EPS = 1e-9
+
+# Sort key of one committed interval: its end time. Intervals on one
+# resource are disjoint (the feasibility invariant), so the start-sorted
+# index has sorted ends too and both columns bisect.
+_END = operator.itemgetter(1)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,8 +133,9 @@ class ClusterTimeline:
         self.n_wireless = int(n_wireless)
         self.rack_hold = np.zeros(self.n_racks, dtype=np.float64)
         self.wireless_hold = np.zeros(self.n_wireless, dtype=np.float64)
-        # Committed occupancy, (start, end, job_id) in absolute time, in
-        # commit order (starts need not be sorted across jobs).
+        # Committed occupancy, (start, end, job_id) in absolute time. Each
+        # list is a sorted interval index (ascending starts; disjoint
+        # intervals make the ends ascending too).
         self.rack_intervals: list[list[tuple[float, float, int]]] = [
             [] for _ in range(self.n_racks)
         ]
@@ -112,11 +143,21 @@ class ClusterTimeline:
         self.wireless_intervals: list[list[tuple[float, float, int]]] = [
             [] for _ in range(self.n_wireless)
         ]
-        # Busy-time accumulators for utilization metrics.
+        # Busy-time accumulators for utilization metrics. Charged at
+        # commit, so compaction never has to re-derive them.
         self.rack_busy_time = 0.0
         self.wired_busy_time = 0.0
         self.wireless_busy_time = 0.0
         self.last_completion = 0.0
+        # Compaction frontier: intervals ending at or before it have been
+        # retired from the index (their busy time stays accumulated).
+        self.compact_frontier = 0.0
+        self.n_compacted = 0
+        # Intervals committed since the last audit: (label, index_list,
+        # interval) triples checked incrementally by assert_feasible.
+        self._audit_backlog: list[
+            tuple[str, list[tuple[float, float, int]], tuple[float, float, int]]
+        ] = []
 
     # -- residual capacity ---------------------------------------------------
 
@@ -170,6 +211,15 @@ class ClusterTimeline:
 
     # -- cross-job arbitration ----------------------------------------------
 
+    @staticmethod
+    def _tail(
+        intervals: list[tuple[float, float, int]], t: float
+    ) -> list[tuple[float, float, int]]:
+        """Intervals ending strictly after ``t``: one bisect on the sorted
+        end column, then the contiguous tail of the index."""
+        i = bisect.bisect_right(intervals, t, key=_END)
+        return intervals[i:]
+
     def channel_busy(self, view: ResidualView, t: float) -> dict:
         """Committed busy intervals on ``view``'s physical channels, mapped
         into the view's local frame (channel ids CH_WIRED / 2+k, times
@@ -177,15 +227,26 @@ class ClusterTimeline:
         dropped; an interval straddling ``t`` keeps its negative-start
         tail (the simulator's gap search handles it). Channels with no
         remaining intervals are omitted, so an empty dict certifies the
-        job's channels are clear from ``t`` on.
+        job's channels are clear from ``t`` on. O(log n + hits) per
+        channel on the sorted interval index; ``t`` must not precede the
+        compaction frontier (retired intervals cannot be reconstructed).
         """
+        if t < self.compact_frontier:
+            raise RuntimeError(
+                f"channel_busy at t={t} precedes the compaction frontier "
+                f"{self.compact_frontier}: intervals ending before the "
+                "frontier have been retired and cannot be replayed"
+            )
         busy: dict[int, list[tuple[float, float]]] = {}
-        wired = [(s - t, e - t) for s, e, _ in self.wired_intervals if e > t]
+        wired = [(s - t, e - t) for s, e, _ in self._tail(self.wired_intervals, t)]
         if wired:
             busy[CH_WIRED] = wired
         for k in range(view.inst.n_wireless):
             phys = int(view.wireless_map[k])
-            ivs = [(s - t, e - t) for s, e, _ in self.wireless_intervals[phys] if e > t]
+            ivs = [
+                (s - t, e - t)
+                for s, e, _ in self._tail(self.wireless_intervals[phys], t)
+            ]
             if ivs:
                 busy[2 + k] = ivs
         return busy
@@ -209,8 +270,24 @@ class ClusterTimeline:
 
     # -- commit --------------------------------------------------------------
 
+    def _insert(
+        self,
+        label: str,
+        intervals: list[tuple[float, float, int]],
+        iv: tuple[float, float, int],
+    ) -> None:
+        """Sorted insert into one resource's interval index, buffering the
+        interval for the incremental feasibility audit."""
+        bisect.insort(intervals, iv)
+        self._audit_backlog.append((label, intervals, iv))
+
     def commit(
-        self, view: ResidualView, sched: Schedule, t: float, job_id: int = -1
+        self,
+        view: ResidualView,
+        sched: Schedule,
+        t: float,
+        job_id: int = -1,
+        holds_out: list | None = None,
     ) -> float:
         """Place ``sched`` (solved in the residual view's local frame,
         relative time 0) onto the cluster starting at absolute time ``t``.
@@ -222,12 +299,16 @@ class ClusterTimeline:
         The caller is responsible for channel feasibility — pass the
         schedule through :meth:`arbitrate` first when the cluster is not
         empty; :meth:`assert_feasible` audits the invariant after the
-        fact. Returns the job's absolute completion time
-        (``t + makespan``).
+        fact. ``holds_out``, when given, receives one
+        ``("rack" | "wireless", physical_id, hold_time)`` triple per
+        resource this commit (re)holds — the delta feed for the service's
+        incrementally maintained free sets. Returns the job's absolute
+        completion time (``t + makespan``).
         """
         inst = view.inst
         job = inst.job
         dur = inst.duration_on(sched.chan)
+        held_w: dict[int, float] = {}
         for i in range(inst.n_racks):
             on_i = sched.rack == i
             if not on_i.any():
@@ -235,10 +316,16 @@ class ClusterTimeline:
             fin = float(np.max(sched.start[on_i] + job.p[on_i]))
             phys = int(view.rack_map[i])
             self.rack_hold[phys] = max(self.rack_hold[phys], t + fin)
+            if holds_out is not None:
+                holds_out.append(("rack", phys, self.rack_hold[phys]))
             self.rack_busy_time += float(np.sum(job.p[on_i]))
             for s, p in zip(sched.start[on_i], job.p[on_i]):
                 if p > 0:
-                    self.rack_intervals[phys].append((t + s, t + s + p, job_id))
+                    self._insert(
+                        f"rack {phys}",
+                        self.rack_intervals[phys],
+                        (t + float(s), t + float(s) + float(p), job_id),
+                    )
         if job.n_edges:
             for e in range(job.n_edges):
                 c, d = int(sched.chan[e]), float(dur[e])
@@ -246,51 +333,126 @@ class ClusterTimeline:
                     continue  # zero-size transfers occupy nothing
                 s = float(sched.tstart[e])
                 if c == CH_WIRED:
-                    self.wired_intervals.append((t + s, t + s + d, job_id))
+                    self._insert(
+                        "wired channel",
+                        self.wired_intervals,
+                        (t + s, t + s + d, job_id),
+                    )
                     self.wired_busy_time += d
                 elif c >= 2:
                     phys = int(view.wireless_map[c - 2])
-                    self.wireless_intervals[phys].append((t + s, t + s + d, job_id))
+                    self._insert(
+                        f"wireless subchannel {phys}",
+                        self.wireless_intervals[phys],
+                        (t + s, t + s + d, job_id),
+                    )
                     self.wireless_hold[phys] = max(
                         self.wireless_hold[phys], t + s + d
                     )
+                    held_w[phys] = self.wireless_hold[phys]
                     self.wireless_busy_time += d
+        if holds_out is not None:
+            for phys, hold in held_w.items():
+                holds_out.append(("wireless", phys, hold))
         completion = t + sched.makespan
         self.last_completion = max(self.last_completion, completion)
         return completion
 
+    # -- compaction ----------------------------------------------------------
+
+    def _indexes(self):
+        for i, ivs in enumerate(self.rack_intervals):
+            yield f"rack {i}", ivs
+        yield "wired channel", self.wired_intervals
+        for k, ivs in enumerate(self.wireless_intervals):
+            yield f"wireless subchannel {k}", ivs
+
+    @property
+    def n_intervals(self) -> int:
+        """Committed intervals currently retained in the index (excludes
+        the ``n_compacted`` already retired)."""
+        return sum(len(ivs) for _label, ivs in self._indexes())
+
+    def compact(self, t: float) -> int:
+        """Retire every committed interval ending at or before ``t`` from
+        the interval index; returns how many were retired.
+
+        Safe whenever ``t`` does not exceed the current epoch: epochs are
+        monotone and every later ``channel_busy`` / ``arbitrate`` query
+        drops intervals ending at or before its (later) epoch anyway, so
+        compaction changes no observable answer — busy-time accumulators
+        were charged at commit and holds are untouched. The pending audit
+        backlog is flushed first (:meth:`assert_feasible`), so no interval
+        is retired unaudited.
+        """
+        self.assert_feasible()
+        t = float(t)
+        dropped = 0
+        for _label, ivs in self._indexes():
+            i = bisect.bisect_right(ivs, t, key=_END)
+            if i:
+                del ivs[:i]
+                dropped += i
+        self.n_compacted += dropped
+        self.compact_frontier = max(self.compact_frontier, t)
+        return dropped
+
     # -- feasibility audit ---------------------------------------------------
 
-    def assert_feasible(self, tol: float = _EPS) -> None:
+    def assert_feasible(self, tol: float = _EPS, full: bool = False) -> None:
         """Audit the committed timeline: no two committed operations may
         overlap on the same physical resource — tasks on a rack, transfers
         on the wired channel, transfers on one wireless subchannel —
         regardless of which jobs they belong to. Raises ``AssertionError``
-        naming the resource and the two owning jobs on the first overlap.
-        """
+        (a real raise, alive under ``python -O``) naming the resource and
+        the two owning jobs on the first overlap.
 
-        def check(label: str, intervals: list[tuple[float, float, int]]) -> None:
-            ordered = sorted(intervals)
-            for (s0, e0, j0), (s1, _e1, j1) in zip(ordered, ordered[1:]):
-                if s1 < e0 - tol:
+        Incremental by default: only intervals committed since the last
+        audit are checked, each against its sorted neighbors in the index
+        (disjointness of adjacent pairs is equivalent to global
+        disjointness on a start-sorted index). ``full=True`` rescans every
+        *retained* interval from scratch — intervals already retired by
+        :meth:`compact` were audited before retirement.
+        """
+        if full:
+            self._audit_backlog.clear()
+            for label, ivs in self._indexes():
+                ordered = sorted(ivs)
+                for (s0, e0, j0), (s1, _e1, j1) in zip(ordered, ordered[1:]):
+                    if s1 < e0 - tol:
+                        raise AssertionError(
+                            f"{label}: committed intervals of job {j0} "
+                            f"[{s0}, {e0}) and job {j1} [{s1}, ...) overlap"
+                        )
+            return
+        backlog, self._audit_backlog = self._audit_backlog, []
+        for label, ivs, iv in backlog:
+            pos = bisect.bisect_left(ivs, iv)
+            s, e, j = iv
+            if pos > 0:
+                s0, e0, j0 = ivs[pos - 1]
+                if s < e0 - tol:
                     raise AssertionError(
                         f"{label}: committed intervals of job {j0} "
-                        f"[{s0}, {e0}) and job {j1} [{s1}, ...) overlap"
+                        f"[{s0}, {e0}) and job {j} [{s}, ...) overlap"
                     )
-
-        for i, ivs in enumerate(self.rack_intervals):
-            check(f"rack {i}", ivs)
-        check("wired channel", self.wired_intervals)
-        for k, ivs in enumerate(self.wireless_intervals):
-            check(f"wireless subchannel {k}", ivs)
+            if pos + 1 < len(ivs):
+                s1, _e1, j1 = ivs[pos + 1]
+                if s1 < e - tol:
+                    raise AssertionError(
+                        f"{label}: committed intervals of job {j} "
+                        f"[{s}, {e}) and job {j1} [{s1}, ...) overlap"
+                    )
 
     # -- metrics -------------------------------------------------------------
 
     def utilization(self, horizon: float) -> dict[str, float]:
         """Busy-time fractions over ``[0, horizon]``. All three figures are
-        exact under the channel-feasible commit model and guaranteed to be
-        true fractions in [0, 1] (asserted — committed occupancy of a
-        unary resource cannot exceed the horizon)."""
+        exact under the channel-feasible commit model (compaction never
+        touches the accumulators) and guaranteed to be true fractions in
+        [0, 1]; a fraction outside the float-noise band raises
+        ``RuntimeError`` — a real raise, NOT an ``assert``, so the audit
+        survives ``python -O`` stripping."""
         if horizon <= 0.0:
             return {"rack": 0.0, "wired": 0.0, "wireless": 0.0}
         util = {
@@ -303,8 +465,9 @@ class ClusterTimeline:
             ),
         }
         for name, frac in util.items():
-            assert -1e-12 <= frac <= 1.0 + 1e-9, (
-                f"{name} utilization {frac} outside [0, 1]: committed "
-                "timeline is not channel-feasible"
-            )
+            if not (-1e-12 <= frac <= 1.0 + 1e-9):
+                raise RuntimeError(
+                    f"{name} utilization {frac} outside [0, 1]: committed "
+                    "timeline is not channel-feasible"
+                )
         return {name: min(max(frac, 0.0), 1.0) for name, frac in util.items()}

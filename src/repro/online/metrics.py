@@ -3,10 +3,12 @@
 The figures of merit of the paper's production claim (§V, ~10% JCT
 reduction) are *arrival-to-completion* job completion times, not solver
 makespans: a job's JCT includes the time it queued for resources. This
-module defines the per-job record (:class:`JobMetrics`) and the aggregate
+module defines the per-job record (:class:`JobMetrics`), the aggregate
 (:class:`OnlineResult`) the service returns — mean/percentile JCT,
 queueing delay, cluster utilization, service makespan, and the scheduler
-throughput / candidate counters used by the serving benchmarks.
+throughput / candidate counters used by the serving benchmarks — and
+:class:`StreamingSeries`, the O(1)-memory quantile sketch the service
+feeds per completion so 100k-job runs never materialize a JCT array.
 """
 
 from __future__ import annotations
@@ -19,7 +21,180 @@ import numpy as np
 if typing.TYPE_CHECKING:  # pragma: no cover - type-only import
     from repro.online.cluster import ClusterTimeline
 
-__all__ = ["JobMetrics", "OnlineResult"]
+__all__ = ["JobMetrics", "OnlineResult", "StreamingSeries"]
+
+
+class _P2Quantile:
+    """Jain & Chlamtac's P-squared estimator for one quantile.
+
+    Five markers track (min, two intermediates, the target quantile, max);
+    each observation shifts marker positions and parabolically adjusts the
+    heights, so the estimate is O(1) memory and O(1) per observation.
+    Callers must seed it with exactly five observations (any order).
+    """
+
+    __slots__ = ("p", "q", "n", "np_", "dn")
+
+    def __init__(self, p: float, first5: typing.Sequence[float]):
+        if len(first5) != 5:
+            raise ValueError("P2 estimator must be seeded with 5 samples")
+        self.p = float(p)
+        self.q = sorted(float(x) for x in first5)
+        self.n = [0.0, 1.0, 2.0, 3.0, 4.0]
+        self.np_ = [0.0, 2 * p, 4 * p, 2 + 2 * p, 4.0]
+        self.dn = [0.0, p / 2, p, (1 + p) / 2, 1.0]
+
+    def add(self, x: float) -> None:
+        q, n = self.q, self.n
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            while x >= q[k + 1]:
+                k += 1
+        for i in range(k + 1, 5):
+            n[i] += 1.0
+        for i in range(5):
+            self.np_[i] += self.dn[i]
+        for i in (1, 2, 3):
+            d = self.np_[i] - n[i]
+            if (d >= 1.0 and n[i + 1] - n[i] > 1.0) or (
+                d <= -1.0 and n[i - 1] - n[i] < -1.0
+            ):
+                d = 1.0 if d > 0 else -1.0
+                qp = self._parabolic(i, d)
+                if not q[i - 1] < qp < q[i + 1]:
+                    qp = self._linear(i, d)
+                q[i] = qp
+                n[i] += d
+
+    def _parabolic(self, i: int, d: float) -> float:
+        q, n = self.q, self.n
+        return q[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1])
+        )
+
+    def _linear(self, i: int, d: float) -> float:
+        j = i + int(d)
+        return self.q[i] + d * (self.q[j] - self.q[i]) / (self.n[j] - self.n[i])
+
+    @property
+    def value(self) -> float:
+        return self.q[2]
+
+
+class StreamingSeries:
+    """Streaming scalar summary: count/mean/min/max plus quantile sketches.
+
+    Exact while small, sketched at scale: the first ``exact_max``
+    observations are buffered and quantiles answered exactly
+    (``np.percentile`` semantics); past that the buffer is replayed into
+    one P-squared estimator per tracked quantile and dropped, after which
+    memory is O(1) regardless of stream length. The replay preserves
+    arrival order, so the sketch state is identical to having streamed
+    from the first observation.
+    """
+
+    __slots__ = ("quantiles", "count", "_sum", "_min", "_max", "_exact",
+                 "_exact_max", "_sketches")
+
+    # p95 rides along so OnlineResult.p95_jct stays answerable at scale.
+    DEFAULT_QUANTILES = (0.50, 0.90, 0.95, 0.99)
+
+    def __init__(
+        self,
+        quantiles: typing.Sequence[float] = DEFAULT_QUANTILES,
+        *,
+        exact_max: int = 64,
+    ):
+        if exact_max < 5:
+            raise ValueError("exact_max must be >= 5 to seed the sketches")
+        for p in quantiles:
+            if not 0.0 < p < 1.0:
+                raise ValueError(f"quantile {p} not in (0, 1)")
+        self.quantiles = tuple(float(p) for p in quantiles)
+        self.count = 0
+        self._sum = 0.0
+        self._min = float("inf")
+        self._max = float("-inf")
+        self._exact: list[float] | None = []
+        self._exact_max = int(exact_max)
+        self._sketches: dict[float, _P2Quantile] | None = None
+
+    def push(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        self._sum += x
+        if x < self._min:
+            self._min = x
+        if x > self._max:
+            self._max = x
+        if self._exact is not None:
+            self._exact.append(x)
+            if len(self._exact) > self._exact_max:
+                buf, self._exact = self._exact, None
+                self._sketches = {
+                    p: _P2Quantile(p, buf[:5]) for p in self.quantiles
+                }
+                for v in buf[5:]:
+                    for sk in self._sketches.values():
+                        sk.add(v)
+        else:
+            assert self._sketches is not None
+            for sk in self._sketches.values():
+                sk.add(x)
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self.count if self.count else 0.0
+
+    @property
+    def max(self) -> float:
+        return self._max if self.count else 0.0
+
+    @property
+    def min(self) -> float:
+        return self._min if self.count else 0.0
+
+    def quantile(self, p: float) -> float:
+        """Estimated ``p``-quantile (exact while the buffer is alive)."""
+        if not self.count:
+            return 0.0
+        if self._exact is not None:
+            return float(np.percentile(self._exact, 100.0 * p))
+        sketches = self._sketches
+        assert sketches is not None
+        if p not in sketches:
+            raise KeyError(
+                f"quantile {p} not tracked (tracked: {self.quantiles}); "
+                "construct the series with it in `quantiles`"
+            )
+        return float(sketches[p].value)
+
+    @property
+    def p50(self) -> float:
+        return self.quantile(0.50)
+
+    @property
+    def p90(self) -> float:
+        return self.quantile(0.90)
+
+    @property
+    def p99(self) -> float:
+        return self.quantile(0.99)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        mode = "exact" if self._exact is not None else "p2"
+        return (
+            f"StreamingSeries(n={self.count}, mean={self.mean:.3g}, "
+            f"p50={self.p50:.3g}, p90={self.p90:.3g}, p99={self.p99:.3g}, "
+            f"mode={mode})"
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +280,20 @@ class OnlineResult:
         .ClusterTimeline` (audited feasible by the service before it
         returns) — kept for post-hoc inspection and the test-suite
         feasibility audit.
+      queue_stats / jct_stats: per-completion :class:`StreamingSeries`
+        over queueing delays and JCTs (``None`` when the result was built
+        without streaming stats, e.g. hand-constructed in tests); the
+        percentile properties below fall back to the ``jobs`` list.
+      peak_active: maximum number of jobs executing concurrently.
+      peak_queue_depth: maximum number of jobs queued (arrived, not yet
+        admitted) at any epoch.
+      n_served: jobs served — equals ``len(jobs)`` unless the service ran
+        with ``record_jobs=False``, in which case ``jobs`` is empty and
+        this counter is the only cardinality record.
+      epoch_commit_latency: per-epoch wall seconds of the
+        arbitrate-and-commit stage (populated only under
+        ``track_epoch_latency=True``; the stress lane's flat-latency
+        check reads it).
     """
 
     jobs: list[JobMetrics]
@@ -123,6 +312,12 @@ class OnlineResult:
     n_backfilled: int = 0
     n_backfill_rejected: int = 0
     timeline: "ClusterTimeline | None" = None
+    queue_stats: StreamingSeries | None = None
+    jct_stats: StreamingSeries | None = None
+    peak_active: int = 0
+    peak_queue_depth: int = 0
+    n_served: int = 0
+    epoch_commit_latency: "list[float] | None" = None
 
     @property
     def jcts(self) -> np.ndarray:
@@ -134,20 +329,62 @@ class OnlineResult:
 
     @property
     def mean_jct(self) -> float:
-        return float(self.jcts.mean()) if self.jobs else 0.0
+        if self.jobs:
+            return float(self.jcts.mean())
+        return self.jct_stats.mean if self.jct_stats is not None else 0.0
 
     @property
     def p95_jct(self) -> float:
-        return float(np.percentile(self.jcts, 95)) if self.jobs else 0.0
+        if self.jobs:
+            return float(np.percentile(self.jcts, 95))
+        if self.jct_stats is not None and self.jct_stats.count:
+            return self.jct_stats.quantile(0.95)
+        return 0.0
 
     @property
     def mean_queueing_delay(self) -> float:
-        return float(self.queueing_delays.mean()) if self.jobs else 0.0
+        if self.jobs:
+            return float(self.queueing_delays.mean())
+        return self.queue_stats.mean if self.queue_stats is not None else 0.0
 
     @property
     def makespan(self) -> float:
         """Service makespan: last completion (== ``horizon``)."""
         return self.horizon
+
+    @property
+    def n_jobs(self) -> int:
+        """Served-job count, valid even when per-job records were elided."""
+        return max(len(self.jobs), self.n_served)
+
+    def _quantile(self, stats: StreamingSeries | None, values, p: float) -> float:
+        if stats is not None and stats.count:
+            return stats.quantile(p)
+        return float(np.percentile(values, 100.0 * p)) if len(values) else 0.0
+
+    @property
+    def p50_queueing_delay(self) -> float:
+        return self._quantile(self.queue_stats, self.queueing_delays, 0.50)
+
+    @property
+    def p90_queueing_delay(self) -> float:
+        return self._quantile(self.queue_stats, self.queueing_delays, 0.90)
+
+    @property
+    def p99_queueing_delay(self) -> float:
+        return self._quantile(self.queue_stats, self.queueing_delays, 0.99)
+
+    @property
+    def p50_jct(self) -> float:
+        return self._quantile(self.jct_stats, self.jcts, 0.50)
+
+    @property
+    def p90_jct(self) -> float:
+        return self._quantile(self.jct_stats, self.jcts, 0.90)
+
+    @property
+    def p99_jct(self) -> float:
+        return self._quantile(self.jct_stats, self.jcts, 0.99)
 
     @property
     def jobs_per_solver_second(self) -> float:
@@ -167,9 +404,14 @@ class OnlineResult:
         jps = self.jobs_per_solver_second
         jps_s = f"{jps:.2f}" if np.isfinite(jps) else "inf"
         return (
-            f"policy={self.policy} warm={self.warm_start} jobs={len(self.jobs)} "
+            f"policy={self.policy} warm={self.warm_start} jobs={self.n_jobs} "
             f"mean_jct={self.mean_jct:.1f} p95_jct={self.p95_jct:.1f} "
             f"mean_queue={self.mean_queueing_delay:.1f} "
+            f"queue_p50/p90/p99={self.p50_queueing_delay:.1f}/"
+            f"{self.p90_queueing_delay:.1f}/{self.p99_queueing_delay:.1f} "
+            f"jct_p50/p90/p99={self.p50_jct:.1f}/{self.p90_jct:.1f}/"
+            f"{self.p99_jct:.1f} "
+            f"peak_active={self.peak_active} peak_queue={self.peak_queue_depth} "
             f"makespan={self.makespan:.1f} "
             f"util(rack/wired/wireless)="
             f"{self.rack_utilization:.2f}/{self.wired_utilization:.2f}/"

@@ -1,28 +1,40 @@
-"""Arrival-driven scheduling service: admission event loop over the fleet
-engine with warm-started re-optimization.
+"""Arrival-driven scheduling service: a three-stage epoch pipeline over the
+fleet engine with warm-started re-optimization.
 
-The event loop turns the offline mega-batch engine
-(:func:`repro.core.vectorized.schedule_fleet`) into a serving system:
+Each admission epoch runs the same pipeline:
 
-  1. **Windowed admission.** Arrivals are batched into admission epochs —
-     the first unserved arrival opens a window of length ``window``; every
-     job arriving inside it joins the epoch's batch. All jobs of one epoch
-     are solved in ONE ``schedule_fleet`` mega-batch launch, so the
-     lockstep driver and the fused §IV-A stage-1 pruner are shared across
-     the batch and compiled programs are reused across epochs (fleets in
-     the same size bucket retrace nothing).
-  2. **Residual capacity and channel-feasible commits.** Each job is
-     solved against the cluster's residual view at the epoch
-     (:class:`repro.online.cluster.ClusterTimeline`): racks and wireless
-     subchannels not held by previously committed jobs, drawn from
-     shrinking per-epoch pools so co-admitted jobs' grants are disjoint.
+  1. **Collect** (:meth:`OnlineScheduler._collect_arrivals`). Arrivals are
+     pulled from a lazily consumed stream (any iterator of time-sorted
+     :class:`~repro.online.workload.ArrivalEvent`; a plain list is sorted
+     and wrapped) and batched into the epoch — the first unserved arrival
+     opens a window of length ``window``; every job arriving inside it
+     joins the epoch's batch. Completions due at the epoch wake the loop
+     and release their grants back into the incrementally maintained
+     free-rack/subchannel sets (delta-updates on grant/release instead of
+     per-epoch ``np.nonzero`` rebuilds over all holds).
+  2. **Plan** (:meth:`OnlineScheduler._plan_batch`). Admission selection
+     draws residual views from shrinking per-epoch pools so co-admitted
+     jobs' grants are disjoint, then all admission and planning solves of
+     the epoch launch as ONE ``schedule_fleet`` mega-batch: the lockstep
+     driver and the fused §IV-A stage-1 pruner are shared across the
+     batch, each job's ``OpTables`` (built once at first solve, cached on
+     the queue entry) skip the per-launch rebuild, and compiled programs
+     are reused across epochs — fleets in the same size bucket retrace
+     nothing, so steady state launches with zero retraces.
+  3. **Arbitrate & commit** (:meth:`OnlineScheduler._arbitrate_and_commit`).
      Every commit — fleet policy and baselines alike — passes through the
      timeline's cross-job arbitration pass, which sequences the job's
      transfers around the busy intervals already committed on its
      physical channels (the shared wired channel above all) by replaying
      the schedule through the host simulator; committed timelines are
-     audited channel-feasible before ``serve`` returns. Completions wake
-     the loop to admit queued work.
+     audited channel-feasible before ``serve`` returns. Committed grants
+     are pushed into the free sets and per-completion streaming stats
+     (p50/p90/p99 queueing delay and JCT, peak gauges), and — with
+     ``compact_interval > 0`` — the timeline's interval index is
+     periodically compacted so steady-state cost depends only on *active*
+     jobs, not the full arrival history (observationally identical;
+     locked by ``tests/test_online_scale.py``).
+
   2b. **Backfilling** (``backfill=True``, an extension of
      ``preserve_order``): when the head-of-line job is blocked, a later
      queued job may overtake it only when arbitration *proves* it cannot
@@ -34,16 +46,17 @@ The event loop turns the offline mega-batch engine
      resources for the head job even with the candidate's grant removed
      for good. A candidate that cannot prove either stays queued (its
      solve still feeds the warm-start incumbents).
-  3. **Warm-started re-optimization.** A job that cannot be admitted
-     (no free rack, or fewer than ``min_free_racks``) stays queued, but is
-     still *planned* in the epoch's mega-batch against its full demanded
-     shape. With ``warm_start=True`` each planning solve (and the eventual
-     admission solve) seeds the engine's sweep with the job's incumbent
-     assignments via the ``seed_pools`` hook — budget-neutral (seeds
-     displace an equal number of random samples), so warm vs cold is an
-     equal-candidate-budget comparison, and since seeds are themselves
-     evaluated, a warm re-solve can never return a worse assignment than
-     its own incumbent's greedy score.
+
+  **Warm-started re-optimization.** A job that cannot be admitted
+  (no free rack, or fewer than ``min_free_racks``) stays queued, but is
+  still *planned* in the epoch's mega-batch against its full demanded
+  shape. With ``warm_start=True`` each planning solve (and the eventual
+  admission solve) seeds the engine's sweep with the job's incumbent
+  assignments via the ``seed_pools`` hook — budget-neutral (seeds
+  displace an equal number of random samples), so warm vs cold is an
+  equal-candidate-budget comparison, and since seeds are themselves
+  evaluated, a warm re-solve can never return a worse assignment than
+  its own incumbent's greedy score.
 
 Determinism: with a fixed ``seed`` and a fixed arrival stream the service
 is bit-reproducible. Engine seeds follow a common-random-numbers
@@ -71,18 +84,21 @@ call — per-job assignments and JCTs are bit-for-bit identical.
 
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
 import time as _time
-from typing import Sequence
+from collections.abc import Sequence as _SequenceABC
+from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
 from repro.core.baselines import ONLINE_BASELINES
 from repro.core.schedule import Schedule
+from repro.core.simulator import OpTables, build_op_tables
 from repro.core.vectorized import schedule_fleet
 from repro.online.cluster import ClusterTimeline, ResidualView
-from repro.online.metrics import JobMetrics, OnlineResult
+from repro.online.metrics import JobMetrics, OnlineResult, StreamingSeries
 from repro.online.workload import ArrivalEvent
 
 __all__ = ["OnlineScheduler", "DEFAULT_SOLVER_KWARGS"]
@@ -117,6 +133,18 @@ class _PendingJob:
     best_sched: Schedule | None = None
     best_makespan: float = np.inf
     best_shape: tuple[int, int] | None = None
+    # Simulator op tables for this job, built on first solve and reused
+    # across every re-optimization epoch (tables depend only on the job's
+    # DAG, so one build serves full-demand and residual shapes alike).
+    op_tables: OpTables | None = None
+    # Free-capacity fingerprint at the job's last planning solve; the
+    # bounded re-plan mode skips re-solving while it is unchanged.
+    view_sig: tuple | None = None
+
+    def tables(self) -> OpTables:
+        if self.op_tables is None:
+            self.op_tables = build_op_tables(self.event.inst)
+        return self.op_tables
 
     def remember(self, res, shape: tuple[int, int], cap: int) -> None:
         assignment = np.asarray(res.best_assignment, dtype=np.int64)
@@ -130,6 +158,139 @@ class _PendingJob:
             self.best_sched = res.schedule
             self.best_makespan = float(res.makespan)
             self.best_shape = shape
+
+
+class _ArrivalStream:
+    """Pull-based arrival source consumed one event at a time.
+
+    A materialized ``Sequence`` is sorted by ``(time, job_id)`` exactly as
+    the pre-pipeline loop did; any other iterable is treated as a lazy
+    stream and must already be time-sorted (enforced event by event), so
+    100k-arrival traces flow through the service without ever
+    materializing.
+    """
+
+    __slots__ = ("_it", "_next", "_last_time")
+
+    def __init__(self, arrivals: Iterable[ArrivalEvent]):
+        if isinstance(arrivals, _SequenceABC):
+            self._it: Iterator[ArrivalEvent] = iter(
+                sorted(arrivals, key=lambda e: (e.time, e.job_id))
+            )
+        else:
+            self._it = iter(arrivals)
+        self._next: ArrivalEvent | None = None
+        self._last_time = -np.inf
+        self._advance()
+
+    def _advance(self) -> None:
+        self._next = next(self._it, None)
+        if self._next is not None:
+            if self._next.time < self._last_time:
+                raise ValueError(
+                    "streaming arrivals must be sorted by time "
+                    f"(saw {self._next.time} after {self._last_time})"
+                )
+            self._last_time = self._next.time
+
+    @property
+    def exhausted(self) -> bool:
+        return self._next is None
+
+    def peek_time(self) -> float:
+        return self._next.time if self._next is not None else np.inf
+
+    def pop(self) -> ArrivalEvent:
+        ev = self._next
+        assert ev is not None
+        self._advance()
+        return ev
+
+
+class _FreeSet:
+    """Incrementally maintained set of free resource ids.
+
+    Mirrors ``np.nonzero(hold <= t)[0]`` without re-scanning the hold
+    vector every epoch: ``grant`` removes an id and records its release time
+    in a min-heap; ``advance`` pops due releases and re-checks the *live*
+    hold (a later commit may have extended it — the stale heap entry is
+    then re-pushed at the real hold, so entries are self-correcting). The
+    id list stays sorted, so ``as_array()`` is bit-identical to the
+    ``np.nonzero`` scan at every epoch.
+    """
+
+    __slots__ = ("ids", "_members", "_releases")
+
+    def __init__(self, n: int):
+        self.ids: list[int] = list(range(n))
+        self._members = set(self.ids)
+        self._releases: list[tuple[float, int]] = []
+
+    def advance(self, t: float, hold: np.ndarray) -> None:
+        rel = self._releases
+        while rel and rel[0][0] <= t:
+            _, i = heapq.heappop(rel)
+            if i in self._members:
+                continue
+            h = float(hold[i])
+            if h <= t:
+                bisect.insort(self.ids, i)
+                self._members.add(i)
+            else:  # stale entry: the hold was extended after this push
+                heapq.heappush(rel, (h, i))
+
+    def grant(self, i: int, release: float) -> None:
+        if i in self._members:
+            del self.ids[bisect.bisect_left(self.ids, i)]
+            self._members.discard(i)
+        heapq.heappush(self._releases, (float(release), i))
+
+    def as_array(self) -> np.ndarray:
+        return np.asarray(self.ids, dtype=np.int64)
+
+    def __len__(self) -> int:
+        return len(self.ids)
+
+
+@dataclasses.dataclass
+class _EpochPlan:
+    """Output of the plan stage, consumed by arbitrate-and-commit."""
+
+    admit: list[_PendingJob]
+    views: list[ResidualView]
+    is_backfill: list[bool]
+    hol_need: tuple[int, int] | None
+    # Fleet policy: one engine result per admitted job (solves already
+    # counted); baselines solve lazily inside the commit stage because
+    # their placement depends on the busy intervals of this epoch's
+    # earlier commits.
+    results: list | None
+
+
+@dataclasses.dataclass
+class _ServeState:
+    """Mutable state threaded through one ``serve`` run's pipeline."""
+
+    cluster: ClusterTimeline
+    free_r: _FreeSet
+    free_w: _FreeSet
+    queue_stats: StreamingSeries
+    jct_stats: StreamingSeries
+    pending: list[_PendingJob] = dataclasses.field(default_factory=list)
+    completions: list[float] = dataclasses.field(default_factory=list)
+    records: list[JobMetrics] = dataclasses.field(default_factory=list)
+    counters: dict = dataclasses.field(
+        default_factory=lambda: {
+            "epochs": 0, "batches": 0, "solves": 0,
+            "candidates": 0, "pruned": 0, "wall": 0.0,
+            "backfilled": 0, "backfill_rejected": 0,
+        }
+    )
+    peak_active: int = 0
+    peak_queue: int = 0
+    n_served: int = 0
+    epoch_latency: list[float] | None = None
+    avail_sig: tuple | None = None
 
 
 class OnlineScheduler:
@@ -177,6 +338,30 @@ class OnlineScheduler:
       seed_pool_size: incumbents remembered per queued job.
       solver_kwargs: overrides merged over :data:`DEFAULT_SOLVER_KWARGS`
         and passed to :func:`repro.core.vectorized.schedule_fleet`.
+      compact_interval: compact the timeline's interval index every this
+        many epochs (0, the default, never compacts — the full committed
+        history stays inspectable on ``OnlineResult.timeline``).
+        Compaction is observationally identical (same commits, same
+        metrics; locked by ``tests/test_online_scale.py``) and keeps
+        steady-state memory proportional to *active* jobs — turn it on
+        for long streams.
+      replan: ``"always"`` (default) re-solves every queued job every
+        epoch — the PR 5 behavior the warm-vs-cold equal-budget
+        comparisons rest on. ``"changed"`` bounds the re-plan set: a
+        queued job is re-solved only when the free-capacity fingerprint
+        (free rack/subchannel id sets) changed since its last planning
+        solve — re-solving against an unchanged cluster can only redraw
+        fresh random samples, so skipping it trades that marginal
+        exploration for an O(changed) epoch cost. Changes ``n_solves``
+        and (under ``warm_start``) incumbent chains; keep ``"always"``
+        for budget-matched policy comparisons.
+      record_jobs: keep one :class:`JobMetrics` per served job (default).
+        ``False`` drops the per-job list (streaming stats, gauges and
+        counters still populate) so 100k-job stress runs hold O(active)
+        memory.
+      track_epoch_latency: record the wall-clock seconds of each epoch's
+        arbitrate-and-commit stage on ``OnlineResult.epoch_commit_latency``
+        (the stress lane's flat-latency check; off by default).
     """
 
     def __init__(
@@ -194,6 +379,10 @@ class OnlineScheduler:
         seed: int = 0,
         seed_pool_size: int = 4,
         solver_kwargs: dict | None = None,
+        compact_interval: int = 0,
+        replan: str = "always",
+        record_jobs: bool = True,
+        track_epoch_latency: bool = False,
     ):
         if policy != "fleet" and policy not in ONLINE_BASELINES:
             raise ValueError(
@@ -210,6 +399,10 @@ class OnlineScheduler:
                 "set preserve_order=True (without it any fitting job may "
                 "overtake already)"
             )
+        if compact_interval < 0:
+            raise ValueError("compact_interval must be non-negative")
+        if replan not in ("always", "changed"):
+            raise ValueError("replan must be 'always' or 'changed'")
         self.n_racks = int(n_racks)
         self.n_wireless = int(n_wireless)
         self.window = float(window)
@@ -224,21 +417,32 @@ class OnlineScheduler:
         self.solver_kwargs = dict(DEFAULT_SOLVER_KWARGS)
         if solver_kwargs:
             self.solver_kwargs.update(solver_kwargs)
+        self.compact_interval = int(compact_interval)
+        self.replan = replan
+        self.record_jobs = bool(record_jobs)
+        self.track_epoch_latency = bool(track_epoch_latency)
 
     # -- public API ----------------------------------------------------------
 
-    def serve(self, arrivals: Sequence[ArrivalEvent]) -> OnlineResult:
-        """Run the event loop over ``arrivals`` until every job completes."""
-        arrivals = sorted(arrivals, key=lambda e: (e.time, e.job_id))
-        cluster = ClusterTimeline(self.n_racks, self.n_wireless)
-        pending: list[_PendingJob] = []
-        completions: list[float] = []  # heap of outstanding completion times
-        records: list[JobMetrics] = []
-        counters = {
-            "epochs": 0, "batches": 0, "solves": 0,
-            "candidates": 0, "pruned": 0, "wall": 0.0,
-            "backfilled": 0, "backfill_rejected": 0,
-        }
+    def serve(
+        self, arrivals: Sequence[ArrivalEvent] | Iterable[ArrivalEvent]
+    ) -> OnlineResult:
+        """Run the epoch pipeline over ``arrivals`` until every job completes.
+
+        ``arrivals`` may be a materialized sequence (sorted here) or a lazy
+        time-sorted iterator (e.g. :func:`~repro.online.workload
+        .stream_production_arrivals`) — the stream is consumed one epoch
+        at a time.
+        """
+        stream = _ArrivalStream(arrivals)
+        st = _ServeState(
+            cluster=ClusterTimeline(self.n_racks, self.n_wireless),
+            free_r=_FreeSet(self.n_racks),
+            free_w=_FreeSet(self.n_wireless),
+            queue_stats=StreamingSeries(),
+            jct_stats=StreamingSeries(),
+            epoch_latency=[] if self.track_epoch_latency else None,
+        )
 
         # Wakeup comparisons are exact (no epsilon): holds are recorded at
         # exact float completion times and the free-resource queries use the
@@ -247,59 +451,84 @@ class OnlineScheduler:
         # completion any amount past ``t`` stays in the heap for its own
         # epoch instead of being consumed early against still-held
         # resources (the _EPS double-booking regression).
-        i = 0
-        while i < len(arrivals) or pending:
-            t_arr = arrivals[i].time + self.window if i < len(arrivals) else np.inf
-            t_cmp = completions[0] if (pending and completions) else np.inf
-            t = min(t_arr, t_cmp) if pending else t_arr
+        while not stream.exhausted or st.pending:
+            t_arr = stream.peek_time() + self.window
+            t_cmp = (
+                st.completions[0] if (st.pending and st.completions) else np.inf
+            )
+            t = min(t_arr, t_cmp) if st.pending else t_arr
             if not np.isfinite(t):
                 raise RuntimeError(
                     "online event loop deadlocked: jobs queued with no "
                     "outstanding completion or arrival to wake on"
                 )
-            while i < len(arrivals) and arrivals[i].time <= t:
-                pending.append(_PendingJob(arrivals[i]))
-                i += 1
-            while completions and completions[0] <= t:
-                heapq.heappop(completions)
-            counters["epochs"] += 1
-            admitted = self._process_epoch(
-                t, pending, cluster, records, counters
-            )
-            for comp in admitted:
-                heapq.heappush(completions, comp)
+            self._collect_arrivals(stream, st, t)
+            st.counters["epochs"] += 1
+            plan = self._plan_batch(t, st)
+            t0 = _time.perf_counter() if st.epoch_latency is not None else 0.0
+            new_completions = self._arbitrate_and_commit(t, st, plan)
+            if st.epoch_latency is not None:
+                st.epoch_latency.append(_time.perf_counter() - t0)
+            for comp in new_completions:
+                heapq.heappush(st.completions, comp)
+            st.peak_active = max(st.peak_active, len(st.completions))
+            if (
+                self.compact_interval
+                and st.counters["epochs"] % self.compact_interval == 0
+            ):
+                st.cluster.compact(t)
 
-        cluster.assert_feasible()
-        records.sort(key=lambda r: r.job_id)
-        horizon = cluster.last_completion
-        util = cluster.utilization(horizon)
+        st.cluster.assert_feasible()
+        st.records.sort(key=lambda r: r.job_id)
+        horizon = st.cluster.last_completion
+        util = st.cluster.utilization(horizon)
         return OnlineResult(
-            jobs=records,
+            jobs=st.records,
             policy=self.policy,
             warm_start=self.warm_start and self.policy == "fleet",
-            n_epochs=counters["epochs"],
-            n_batches=counters["batches"],
-            n_solves=counters["solves"],
-            n_candidates=counters["candidates"],
-            n_pruned=counters["pruned"],
-            solver_wall=counters["wall"],
+            n_epochs=st.counters["epochs"],
+            n_batches=st.counters["batches"],
+            n_solves=st.counters["solves"],
+            n_candidates=st.counters["candidates"],
+            n_pruned=st.counters["pruned"],
+            solver_wall=st.counters["wall"],
             horizon=horizon,
             rack_utilization=util["rack"],
             wired_utilization=util["wired"],
             wireless_utilization=util["wireless"],
-            n_backfilled=counters["backfilled"],
-            n_backfill_rejected=counters["backfill_rejected"],
-            timeline=cluster,
+            n_backfilled=st.counters["backfilled"],
+            n_backfill_rejected=st.counters["backfill_rejected"],
+            timeline=st.cluster,
+            queue_stats=st.queue_stats,
+            jct_stats=st.jct_stats,
+            peak_active=st.peak_active,
+            peak_queue_depth=st.peak_queue,
+            n_served=st.n_served,
+            epoch_commit_latency=st.epoch_latency,
         )
 
-    # -- epoch processing ----------------------------------------------------
+    # -- stage 1: collect ----------------------------------------------------
+
+    def _collect_arrivals(
+        self, stream: _ArrivalStream, st: _ServeState, t: float
+    ) -> None:
+        """Pull arrivals due at epoch ``t`` into the queue, retire due
+        completions, and advance the free sets to ``t``."""
+        while not stream.exhausted and stream.peek_time() <= t:
+            st.pending.append(_PendingJob(stream.pop()))
+        st.peak_queue = max(st.peak_queue, len(st.pending))
+        while st.completions and st.completions[0] <= t:
+            heapq.heappop(st.completions)
+        st.free_r.advance(t, st.cluster.rack_hold)
+        st.free_w.advance(t, st.cluster.wireless_hold)
+        if self.replan == "changed":
+            st.avail_sig = (tuple(st.free_r.ids), tuple(st.free_w.ids))
+
+    # -- stage 2: plan -------------------------------------------------------
 
     def _engine_seed(self, job: _PendingJob, planning: bool) -> int:
         base = self.seed + 1009 * job.event.job_id
         return base + 9173 * job.n_solves if planning else base
-
-    def _admissible(self, cluster: ClusterTimeline, t: float) -> bool:
-        return cluster.free_racks(t).size >= self.min_free_racks
 
     def _hol_need(self, inst) -> tuple[int, int]:
         """Racks and wireless subchannels a blocked head-of-line job needs
@@ -310,6 +539,127 @@ class OnlineScheduler:
             need_r = max(need_r, min(inst.n_racks, self.n_racks))
             need_w = min(inst.n_wireless, self.n_wireless)
         return need_r, need_w
+
+    def _select_admissions(self, t: float, st: _ServeState) -> _EpochPlan:
+        """Admission selection: draw disjoint residual views from shrinking
+        pools; order-preserving modes flag overtake candidates."""
+        cluster = st.cluster
+        hol_need = None  # head-of-line protection bound for backfills
+        if self.policy == "fifo_solo":
+            # Solo rule: head-of-line job only, and only on a fully idle
+            # cluster (every rack free implies every channel free too —
+            # channel holds never outlast the rack hold of the consumer).
+            if len(st.free_r) < self.n_racks:
+                return _EpochPlan([], [], [], None, None)
+            admit = st.pending[:1]
+            views = [cluster.residual_view(admit[0].event.inst, t)]
+            return _EpochPlan(admit, views, [False], None, None)
+        # Racks AND wireless subchannels granted within one epoch are
+        # mutually exclusive: each admitted job consumes its grant
+        # from a shrinking pool, so later jobs of the epoch see only
+        # what is left. The shared wired channel is never granted —
+        # cross-job wired contention is resolved at commit time by the
+        # timeline's arbitration pass.
+        pool = st.free_r.as_array()
+        pool_w = st.free_w.as_array()
+        admit, views, is_backfill = [], [], []
+        blocked = False  # head-of-line blocked (order-preserving modes)
+        for p in st.pending:
+            inst = p.event.inst
+            ok = pool.size >= self.min_free_racks
+            if ok and self.require_full_demand:
+                # Demands are clamped to the cluster shape so an
+                # oversized job can still (eventually) be admitted.
+                ok = (
+                    pool.size >= min(inst.n_racks, self.n_racks)
+                    and pool_w.size >= min(inst.n_wireless, self.n_wireless)
+                )
+            overtakes = self.preserve_order and blocked
+            if overtakes and not self.backfill:
+                ok = False  # head-of-line blocking: no overtaking
+            if ok:
+                view = cluster.residual_view(
+                    inst, t, rack_pool=pool, wireless_pool=pool_w
+                )
+                pool = pool[view.inst.n_racks :]
+                pool_w = pool_w[view.inst.n_wireless :]
+                admit.append(p)
+                views.append(view)
+                # An overtaker is only a *candidate*: its commit below
+                # must pass the head-of-line no-delay proof
+                # (``_backfill_safe``) or it stays queued (the racks
+                # it consumed from the pool stay unused this epoch —
+                # conservative and deterministic).
+                is_backfill.append(overtakes)
+            elif self.preserve_order and not blocked:
+                blocked = True
+                hol_need = self._hol_need(inst)
+        return _EpochPlan(admit, views, is_backfill, hol_need, None)
+
+    def _plan_batch(self, t: float, st: _ServeState) -> _EpochPlan | None:
+        """Admission selection plus the epoch's single mega-batch launch."""
+        if not st.pending:
+            return None
+        plan = self._select_admissions(t, st)
+        if self.policy != "fleet":
+            return plan
+        # Queued ("plan") jobs are re-solved every epoch in BOTH warm
+        # and cold modes: cold-start re-optimization means searching
+        # from scratch each epoch, and running its (discarded)
+        # planning solves keeps warm-vs-cold an equal-total-budget
+        # comparison — the benchmarks' warm_solves == cold_solves
+        # records rest on this. Cold planning never changes a
+        # committed schedule (admission solves ignore history), only
+        # solver_wall/n_solves. (``replan="changed"`` opts out: it
+        # skips queued jobs whose free-capacity fingerprint is
+        # unchanged since their last solve.)
+        admitted = set(map(id, plan.admit))
+        queued = [p for p in st.pending if id(p) not in admitted]
+        if self.replan == "changed":
+            queued = [
+                p
+                for p in queued
+                if p.n_solves == 0 or p.view_sig != st.avail_sig
+            ]
+            for p in queued:
+                p.view_sig = st.avail_sig
+        batch = plan.admit + queued
+        if not batch:
+            return plan
+        instances = [v.inst for v in plan.views] + [
+            p.event.inst for p in queued
+        ]
+        seeds = [self._engine_seed(p, planning=False) for p in plan.admit] + [
+            self._engine_seed(p, planning=True) for p in queued
+        ]
+        seed_pools = None
+        if self.warm_start:
+            seed_pools = [
+                np.stack(p.incumbents, axis=0) if p.incumbents else None
+                for p in batch
+            ]
+        t0 = _time.perf_counter()
+        fleet = schedule_fleet(
+            instances,
+            seed=seeds,
+            seed_pools=seed_pools,
+            op_tables=[p.tables() for p in batch],
+            **self.solver_kwargs,
+        )
+        st.counters["wall"] += _time.perf_counter() - t0
+        st.counters["batches"] += 1
+        st.counters["solves"] += len(batch)
+        st.counters["candidates"] += fleet.n_candidates
+        st.counters["pruned"] += fleet.n_pruned
+        for p, inst, res in zip(batch, instances, fleet.results):
+            p.n_solves += 1
+            p.remember(
+                res, (inst.n_racks, inst.n_wireless), self.seed_pool_size
+            )
+        plan.results = fleet.results[: len(plan.admit)]
+        return plan
+
+    # -- stage 3: arbitrate & commit -----------------------------------------
 
     def _backfill_safe(
         self,
@@ -356,111 +706,48 @@ class OnlineScheduler:
                 return False
         return True
 
-    def _process_epoch(
+    def _commit_job(
         self,
         t: float,
-        pending: list[_PendingJob],
-        cluster: ClusterTimeline,
-        records: list[JobMetrics],
-        counters: dict,
-    ) -> list[float]:
-        """Admit / plan the queue at epoch ``t``; returns new completions."""
-        if not pending:
-            return []
-        hol_need = None  # head-of-line protection bound for backfills
-        if self.policy == "fifo_solo":
-            # Solo rule: head-of-line job only, and only on a fully idle
-            # cluster (every rack free implies every channel free too —
-            # channel holds never outlast the rack hold of the consumer).
-            if cluster.free_racks(t).size < self.n_racks:
-                return []
-            admit, plan = pending[:1], []
-            views = [cluster.residual_view(admit[0].event.inst, t)]
-            is_backfill = [False]
-        else:
-            # Racks AND wireless subchannels granted within one epoch are
-            # mutually exclusive: each admitted job consumes its grant
-            # from a shrinking pool, so later jobs of the epoch see only
-            # what is left. The shared wired channel is never granted —
-            # cross-job wired contention is resolved at commit time by the
-            # timeline's arbitration pass.
-            pool = cluster.free_racks(t)
-            pool_w = cluster.free_wireless(t)
-            admit, plan, views, is_backfill = [], [], [], []
-            blocked = False  # head-of-line blocked (order-preserving modes)
-            for p in pending:
-                inst = p.event.inst
-                ok = pool.size >= self.min_free_racks
-                if ok and self.require_full_demand:
-                    # Demands are clamped to the cluster shape so an
-                    # oversized job can still (eventually) be admitted.
-                    ok = (
-                        pool.size >= min(inst.n_racks, self.n_racks)
-                        and pool_w.size >= min(inst.n_wireless, self.n_wireless)
-                    )
-                overtakes = self.preserve_order and blocked
-                if overtakes and not self.backfill:
-                    ok = False  # head-of-line blocking: no overtaking
-                if ok:
-                    view = cluster.residual_view(
-                        inst, t, rack_pool=pool, wireless_pool=pool_w
-                    )
-                    pool = pool[view.inst.n_racks :]
-                    pool_w = pool_w[view.inst.n_wireless :]
-                    admit.append(p)
-                    views.append(view)
-                    # An overtaker is only a *candidate*: its commit below
-                    # must pass the head-of-line no-delay proof
-                    # (``_backfill_safe``) or it stays queued (the racks
-                    # it consumed from the pool stay unused this epoch —
-                    # conservative and deterministic).
-                    is_backfill.append(overtakes)
-                else:
-                    if self.preserve_order and not blocked:
-                        blocked = True
-                        hol_need = self._hol_need(inst)
-                    plan.append(p)
-        assert all(v is not None for v in views)
+        st: _ServeState,
+        p: _PendingJob,
+        view: ResidualView,
+        placed: Schedule,
+        solver_mk: float,
+        backfilled: bool,
+    ) -> float:
+        """Land one arbitrated schedule: timeline commit, free-set grants,
+        streaming stats, and (optionally) the per-job record."""
+        holds: list[tuple[str, int, float]] = []
+        comp = st.cluster.commit(
+            view, placed, t, job_id=p.event.job_id, holds_out=holds
+        )
+        for kind, phys, hold in holds:
+            (st.free_r if kind == "rack" else st.free_w).grant(phys, hold)
+        st.counters["backfilled"] += backfilled
+        st.n_served += 1
+        st.queue_stats.push(t - p.event.time)
+        st.jct_stats.push(comp - p.event.time)
+        if self.record_jobs:
+            st.records.append(
+                self._record(p, view, t, comp, placed, solver_mk, backfilled)
+            )
+        return comp
 
+    def _arbitrate_and_commit(
+        self, t: float, st: _ServeState, plan: _EpochPlan | None
+    ) -> list[float]:
+        """Arbitrate each admitted schedule onto the shared channels and
+        commit the survivors; returns their completion times."""
+        if plan is None or not plan.admit:
+            return []
+        cluster = st.cluster
         new_completions: list[float] = []
         committed: list[_PendingJob] = []
         if self.policy == "fleet":
-            # Queued ("plan") jobs are re-solved every epoch in BOTH warm
-            # and cold modes: cold-start re-optimization means searching
-            # from scratch each epoch, and running its (discarded)
-            # planning solves keeps warm-vs-cold an equal-total-budget
-            # comparison — the benchmarks' warm_solves == cold_solves
-            # records rest on this. Cold planning never changes a
-            # committed schedule (admission solves ignore history), only
-            # solver_wall/n_solves.
-            batch = admit + plan
-            if not batch:
-                return []
-            instances = [v.inst for v in views] + [p.event.inst for p in plan]
-            seeds = [self._engine_seed(p, planning=False) for p in admit] + [
-                self._engine_seed(p, planning=True) for p in plan
-            ]
-            seed_pools = None
-            if self.warm_start:
-                seed_pools = [
-                    np.stack(p.incumbents, axis=0) if p.incumbents else None
-                    for p in batch
-                ]
-            t0 = _time.perf_counter()
-            fleet = schedule_fleet(
-                instances, seed=seeds, seed_pools=seed_pools, **self.solver_kwargs
-            )
-            counters["wall"] += _time.perf_counter() - t0
-            counters["batches"] += 1
-            counters["solves"] += len(batch)
-            counters["candidates"] += fleet.n_candidates
-            counters["pruned"] += fleet.n_pruned
-            for p, inst, res in zip(batch, instances, fleet.results):
-                p.n_solves += 1
-                p.remember(
-                    res, (inst.n_racks, inst.n_wireless), self.seed_pool_size
-                )
-            for p, view, bf, res in zip(admit, views, is_backfill, fleet.results):
+            for p, view, bf, res in zip(
+                plan.admit, plan.views, plan.is_backfill, plan.results
+            ):
                 sched, mk = res.schedule, res.makespan
                 if (
                     self.warm_start
@@ -478,17 +765,15 @@ class OnlineScheduler:
                 # clear).
                 placed = cluster.arbitrate(view, sched, t)
                 if bf and not self._backfill_safe(
-                    cluster, view, t + placed.makespan, t, hol_need
+                    cluster, view, t + placed.makespan, t, plan.hol_need
                 ):
                     # Arbitration cannot prove the overtake harmless: the
                     # candidate would hold a resource the head-of-line job
                     # needs past its reservation. It stays queued; its
                     # solve already fed the warm-start incumbents above.
-                    counters["backfill_rejected"] += 1
+                    st.counters["backfill_rejected"] += 1
                     continue
-                comp = cluster.commit(view, placed, t, job_id=p.event.job_id)
-                counters["backfilled"] += bf
-                records.append(self._record(p, view, t, comp, placed, mk, bf))
+                comp = self._commit_job(t, st, p, view, placed, mk, bf)
                 new_completions.append(comp)
                 committed.append(p)
         else:
@@ -498,35 +783,35 @@ class OnlineScheduler:
             # transfers around them (``channel_busy`` seeds the same
             # timeline machinery the replay uses), so its schedule is
             # already cross-job arbitrated — committing it directly keeps
-            # the heuristic's placement and skips a redundant replay. The
-            # end-of-serve audit verifies the invariant like everywhere
-            # else.
+            # the heuristic's placement and skips a redundant replay.
+            # Solving stays in this stage, not ``_plan_batch``, because
+            # each placement depends on the busy intervals of this
+            # epoch's *earlier* commits. The end-of-serve audit verifies
+            # the invariant like everywhere else.
             fn = ONLINE_BASELINES[self.policy]
-            for p, view, bf in zip(admit, views, is_backfill):
+            for p, view, bf in zip(plan.admit, plan.views, plan.is_backfill):
                 t0 = _time.perf_counter()
                 placed = fn(
                     view.inst,
                     use_wireless=view.inst.n_wireless > 0,
                     channel_busy=cluster.channel_busy(view, t),
                 )
-                counters["wall"] += _time.perf_counter() - t0
-                counters["solves"] += 1
+                st.counters["wall"] += _time.perf_counter() - t0
+                st.counters["solves"] += 1
                 p.n_solves += 1
                 if bf and not self._backfill_safe(
-                    cluster, view, t + placed.makespan, t, hol_need
+                    cluster, view, t + placed.makespan, t, plan.hol_need
                 ):
-                    counters["backfill_rejected"] += 1
+                    st.counters["backfill_rejected"] += 1
                     continue
-                comp = cluster.commit(view, placed, t, job_id=p.event.job_id)
-                counters["backfilled"] += bf
-                records.append(
-                    self._record(p, view, t, comp, placed, placed.makespan, bf)
+                comp = self._commit_job(
+                    t, st, p, view, placed, placed.makespan, bf
                 )
                 new_completions.append(comp)
                 committed.append(p)
 
         for p in committed:
-            pending.remove(p)
+            st.pending.remove(p)
         return new_completions
 
     @staticmethod

@@ -18,6 +18,13 @@ streams of :class:`ArrivalEvent`:
   * :func:`trace_arrivals` — trace-driven replay of explicit
     ``(arrival_time, job)`` pairs.
 
+The seeded generators are *streaming first*: :func:`stream_poisson_arrivals`
+and :func:`stream_production_arrivals` yield events lazily in arrival
+order (O(1) memory per event), which is what lets the stress lane push
+100k-arrival traces through the service without materializing them. The
+list-returning functions above are thin ``list(...)`` wrappers over the
+streams and emit bit-identical events.
+
 Determinism contract: a generator called twice with the same seed and
 parameters returns bit-identical streams (same arrival times, same DAGs,
 same demands). Streams are sorted by arrival time, times are
@@ -28,7 +35,7 @@ non-negative, and every generated instance is feasible by construction —
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from typing import Iterable, Iterator, Sequence
 
 import numpy as np
 
@@ -45,6 +52,8 @@ __all__ = [
     "ArrivalEvent",
     "poisson_arrivals",
     "production_arrivals",
+    "stream_poisson_arrivals",
+    "stream_production_arrivals",
     "trace_arrivals",
     "PRODUCTION_FAMILY_WEIGHTS",
     "PRODUCTION_RHO_PALETTE",
@@ -91,6 +100,48 @@ def _sample_family_job(
     raise ValueError(f"unknown family {family!r}")
 
 
+def stream_poisson_arrivals(
+    seed: int,
+    rate: float,
+    n_jobs: int,
+    *,
+    n_racks: int = 6,
+    n_wireless: int = 2,
+    rho: float = 0.5,
+    families: Sequence[str] = JOB_FAMILIES,
+    wired_rate: float = 1.0,
+    wireless_rate: float = 1.0,
+) -> Iterator[ArrivalEvent]:
+    """Streaming form of :func:`poisson_arrivals`.
+
+    Yields the same events, in the same (time-sorted) order, one at a
+    time — arrival times are a cumulative sum of non-negative exponential
+    gaps, so the generation order *is* the sorted order. Parameter
+    validation happens eagerly at call time, not at first ``next()``.
+    """
+    if rate <= 0:
+        raise ValueError("rate must be positive")
+
+    def _gen() -> Iterator[ArrivalEvent]:
+        rng = np.random.default_rng(seed)
+        t = 0.0
+        for j in range(n_jobs):
+            t += float(rng.exponential(1.0 / rate))
+            family = str(families[int(rng.integers(len(families)))])
+            n_tasks = int(rng.integers(5, 11))
+            job = _sample_family_job(rng, family, n_tasks, rho)
+            inst = ProblemInstance(
+                job=job,
+                n_racks=n_racks,
+                n_wireless=n_wireless,
+                wired_rate=wired_rate,
+                wireless_rate=wireless_rate,
+            )
+            yield ArrivalEvent(time=t, inst=inst, job_id=j, family=family)
+
+    return _gen()
+
+
 def poisson_arrivals(
     seed: int,
     rate: float,
@@ -112,27 +163,24 @@ def poisson_arrivals(
     job demands the full ``(n_racks, n_wireless)`` cluster shape.
 
     Returns a time-sorted list of :class:`ArrivalEvent`; same seed =>
-    bit-identical stream.
+    bit-identical stream. This is a ``list(...)`` wrapper over
+    :func:`stream_poisson_arrivals`.
     """
-    if rate <= 0:
-        raise ValueError("rate must be positive")
-    rng = np.random.default_rng(seed)
-    t = 0.0
-    events: list[ArrivalEvent] = []
-    for j in range(n_jobs):
-        t += float(rng.exponential(1.0 / rate))
-        family = str(families[int(rng.integers(len(families)))])
-        n_tasks = int(rng.integers(5, 11))
-        job = _sample_family_job(rng, family, n_tasks, rho)
-        inst = ProblemInstance(
-            job=job,
-            n_racks=n_racks,
-            n_wireless=n_wireless,
-            wired_rate=wired_rate,
-            wireless_rate=wireless_rate,
+    return _sorted_events(
+        list(
+            stream_poisson_arrivals(
+                seed,
+                rate,
+                n_jobs,
+                n_racks=n_racks,
+                n_wireless=n_wireless,
+                rho=rho,
+                families=families,
+                wired_rate=wired_rate,
+                wireless_rate=wireless_rate,
+            )
         )
-        events.append(ArrivalEvent(time=t, inst=inst, job_id=j, family=family))
-    return _sorted_events(events)
+    )
 
 
 # §V production mix: MapReduce-style workflows dominate the trace, and a
@@ -177,7 +225,43 @@ def production_arrivals(
 
     Returns a time-sorted list of :class:`ArrivalEvent`; same seed =>
     bit-identical stream (the default ``min_wireless_demand=None`` draws
-    nothing extra, so legacy streams are unchanged).
+    nothing extra, so legacy streams are unchanged). This is a
+    ``list(...)`` wrapper over :func:`stream_production_arrivals`.
+    """
+    return _sorted_events(
+        list(
+            stream_production_arrivals(
+                seed,
+                rate,
+                n_jobs,
+                n_racks=n_racks,
+                n_wireless=n_wireless,
+                min_rack_demand=min_rack_demand,
+                min_wireless_demand=min_wireless_demand,
+                wired_rate=wired_rate,
+                wireless_rate=wireless_rate,
+            )
+        )
+    )
+
+
+def stream_production_arrivals(
+    seed: int,
+    rate: float,
+    n_jobs: int,
+    *,
+    n_racks: int = 6,
+    n_wireless: int = 2,
+    min_rack_demand: int = 3,
+    min_wireless_demand: int | None = None,
+    wired_rate: float = 1.0,
+    wireless_rate: float = 1.0,
+) -> Iterator[ArrivalEvent]:
+    """Streaming form of :func:`production_arrivals`.
+
+    Yields the same events, in the same (time-sorted) order, one at a
+    time, so arbitrarily long production traces cost O(1) memory in the
+    generator. Parameter validation happens eagerly at call time.
     """
     if rate <= 0:
         raise ValueError("rate must be positive")
@@ -187,37 +271,39 @@ def production_arrivals(
         0 <= min_wireless_demand <= n_wireless
     ):
         raise ValueError("min_wireless_demand must be in [0, n_wireless]")
-    rng = np.random.default_rng(seed)
-    fam_names = tuple(PRODUCTION_FAMILY_WEIGHTS)
-    fam_p = np.asarray([PRODUCTION_FAMILY_WEIGHTS[f] for f in fam_names])
-    fam_p = fam_p / fam_p.sum()
-    rho_vals = np.asarray([v for v, _ in PRODUCTION_RHO_PALETTE])
-    rho_p = np.asarray([w for _, w in PRODUCTION_RHO_PALETTE])
-    rho_p = rho_p / rho_p.sum()
 
-    t = 0.0
-    events: list[ArrivalEvent] = []
-    for j in range(n_jobs):
-        t += float(rng.exponential(1.0 / rate))
-        family = str(fam_names[int(rng.choice(len(fam_names), p=fam_p))])
-        rho = float(rho_vals[int(rng.choice(len(rho_vals), p=rho_p))])
-        n_tasks = int(rng.integers(5, 11))
-        job = _sample_family_job(rng, family, n_tasks, rho)
-        demand = int(rng.integers(min_rack_demand, n_racks + 1))
-        demand_w = (
-            n_wireless
-            if min_wireless_demand is None
-            else int(rng.integers(min_wireless_demand, n_wireless + 1))
-        )
-        inst = ProblemInstance(
-            job=job,
-            n_racks=demand,
-            n_wireless=demand_w,
-            wired_rate=wired_rate,
-            wireless_rate=wireless_rate,
-        )
-        events.append(ArrivalEvent(time=t, inst=inst, job_id=j, family=family))
-    return _sorted_events(events)
+    def _gen() -> Iterator[ArrivalEvent]:
+        rng = np.random.default_rng(seed)
+        fam_names = tuple(PRODUCTION_FAMILY_WEIGHTS)
+        fam_p = np.asarray([PRODUCTION_FAMILY_WEIGHTS[f] for f in fam_names])
+        fam_p = fam_p / fam_p.sum()
+        rho_vals = np.asarray([v for v, _ in PRODUCTION_RHO_PALETTE])
+        rho_p = np.asarray([w for _, w in PRODUCTION_RHO_PALETTE])
+        rho_p = rho_p / rho_p.sum()
+
+        t = 0.0
+        for j in range(n_jobs):
+            t += float(rng.exponential(1.0 / rate))
+            family = str(fam_names[int(rng.choice(len(fam_names), p=fam_p))])
+            rho = float(rho_vals[int(rng.choice(len(rho_vals), p=rho_p))])
+            n_tasks = int(rng.integers(5, 11))
+            job = _sample_family_job(rng, family, n_tasks, rho)
+            demand = int(rng.integers(min_rack_demand, n_racks + 1))
+            demand_w = (
+                n_wireless
+                if min_wireless_demand is None
+                else int(rng.integers(min_wireless_demand, n_wireless + 1))
+            )
+            inst = ProblemInstance(
+                job=job,
+                n_racks=demand,
+                n_wireless=demand_w,
+                wired_rate=wired_rate,
+                wireless_rate=wireless_rate,
+            )
+            yield ArrivalEvent(time=t, inst=inst, job_id=j, family=family)
+
+    return _gen()
 
 
 def trace_arrivals(

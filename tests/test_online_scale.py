@@ -1,0 +1,451 @@
+"""O(active) serving-core contracts: the sorted interval index, timeline
+compaction, the incremental feasibility audit, the service's incremental
+free sets, streaming workload/metrics, and — the tentpole equivalence —
+``serve()`` with aggressive per-epoch ``compact()`` bit-identical to the
+uncompacted path on seeded Poisson and production streams.
+
+The compaction property runs under Hypothesis when installed (CI's
+``pip install -e .[test]`` lane); otherwise a fixed seeded sweep of the
+same check (this container ships without hypothesis by design).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ProblemInstance, random_job, schedule_fleet
+from repro.core.simulator import build_op_tables
+from repro.online import (
+    ClusterTimeline,
+    OnlineScheduler,
+    StreamingSeries,
+    poisson_arrivals,
+    production_arrivals,
+    stream_poisson_arrivals,
+    stream_production_arrivals,
+)
+from repro.online.service import _FreeSet
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+FAST_SOLVER = dict(
+    max_enumerate=500, n_samples=128, batch_size=256,
+    refine_rounds=2, refine_pool=128,
+)
+
+
+# ---------------------------------------------------------------------------
+# Compaction equivalence (the tentpole property)
+# ---------------------------------------------------------------------------
+
+def _stream(kind: str, seed: int, n_jobs: int, rate: float):
+    if kind == "poisson":
+        return poisson_arrivals(seed, rate=rate, n_jobs=n_jobs)
+    return production_arrivals(seed, rate=rate, n_jobs=n_jobs)
+
+
+def _assert_results_identical(a, b):
+    assert len(a.jobs) == len(b.jobs)
+    for ja, jb in zip(a.jobs, b.jobs):
+        for f in dataclasses.fields(ja):
+            va, vb = getattr(ja, f.name), getattr(jb, f.name)
+            if isinstance(va, np.ndarray):
+                assert np.array_equal(va, vb), f.name
+            else:
+                assert va == vb, f.name
+    assert a.horizon == b.horizon
+    assert a.n_epochs == b.n_epochs
+    assert a.rack_utilization == b.rack_utilization
+    assert a.wired_utilization == b.wired_utilization
+    assert a.wireless_utilization == b.wireless_utilization
+
+
+def _check_compaction_equivalence(kind, seed, n_jobs, rate, policy):
+    evs = _stream(kind, seed, n_jobs, rate)
+    kw = dict(window=5.0, policy=policy, seed=seed)
+    if policy == "fleet":
+        kw["solver_kwargs"] = FAST_SOLVER
+    plain = OnlineScheduler(6, 2, **kw).serve(evs)
+    compacted = OnlineScheduler(6, 2, compact_interval=1, **kw).serve(evs)
+    _assert_results_identical(plain, compacted)
+    # Compaction actually retired history (the streams overlap in time) and
+    # the retained index is the uncompacted one minus the retirees.
+    assert compacted.timeline.n_compacted > 0
+    assert (
+        compacted.timeline.n_intervals + compacted.timeline.n_compacted
+        == plain.timeline.n_intervals
+    )
+    # Busy accumulators are charged at commit: identical on both arms.
+    assert compacted.timeline.wired_busy_time == plain.timeline.wired_busy_time
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=6,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        kind=st.sampled_from(["poisson", "production"]),
+        seed=st.integers(0, 10**6),
+        n_jobs=st.integers(4, 10),
+        rate=st.sampled_from([1 / 20, 1 / 60]),
+    )
+    def test_compaction_equivalence_property(kind, seed, n_jobs, rate):
+        _check_compaction_equivalence(kind, seed, n_jobs, rate, "greedy_list")
+
+else:  # fixed seeded sweep of the same property
+
+    @pytest.mark.parametrize("case", range(6))
+    def test_compaction_equivalence_property(case):
+        rng = np.random.default_rng(3000 + case)
+        _check_compaction_equivalence(
+            kind=["poisson", "production"][case % 2],
+            seed=int(rng.integers(10**6)),
+            n_jobs=int(rng.integers(4, 11)),
+            rate=float([1 / 20, 1 / 60][case % 2]),
+            policy="greedy_list",
+        )
+
+
+def test_compaction_equivalence_fleet_policy():
+    """The engine path (warm starts, keep-incumbent, mega-batches) is just
+    as oblivious to compaction as the baselines."""
+    _check_compaction_equivalence("production", 3, 6, 1 / 30, "fleet")
+
+
+# ---------------------------------------------------------------------------
+# Interval index + compaction unit contracts
+# ---------------------------------------------------------------------------
+
+def _committed_cluster(seed=0, n_jobs=8):
+    evs = production_arrivals(seed, rate=1 / 20, n_jobs=n_jobs)
+    res = OnlineScheduler(6, 2, window=5.0, policy="greedy_list",
+                         seed=seed).serve(evs)
+    return res
+
+
+def test_interval_index_is_sorted_and_tail_query_matches_scan():
+    res = _committed_cluster()
+    tl = res.timeline
+    assert tl.wired_intervals, "stream must contend on the wired channel"
+    starts = [s for s, _, _ in tl.wired_intervals]
+    ends = [e for _, e, _ in tl.wired_intervals]
+    assert starts == sorted(starts)
+    assert ends == sorted(ends)  # disjointness makes the end column sorted
+    for t in (0.0, ends[len(ends) // 2], res.horizon):
+        tail = ClusterTimeline._tail(tl.wired_intervals, t)
+        assert tail == [iv for iv in tl.wired_intervals if iv[1] > t]
+
+
+def test_compact_retires_only_finished_intervals_and_raises_frontier():
+    res = _committed_cluster()
+    tl = res.timeline
+    t_mid = res.horizon / 2
+    before = tl.n_intervals
+    keep = len(ClusterTimeline._tail(tl.wired_intervals, t_mid))
+    dropped = tl.compact(t_mid)
+    assert dropped > 0 and tl.n_intervals == before - dropped
+    assert len(tl.wired_intervals) == keep
+    assert all(e > t_mid for _, e, _ in tl.wired_intervals)
+    assert tl.compact_frontier == t_mid
+    assert tl.n_compacted == dropped
+    # Queries at or past the frontier still work; earlier ones refuse
+    # (the retired history cannot be replayed).
+    inst = production_arrivals(0, rate=1.0, n_jobs=1)[0].inst
+    view = tl.residual_view(inst, res.horizon)
+    assert tl.channel_busy(view, res.horizon) == {}
+    with pytest.raises(RuntimeError, match="compaction frontier"):
+        tl.channel_busy(view, t_mid - 1.0)
+
+
+def test_utilization_out_of_range_raises_not_asserts():
+    tl = ClusterTimeline(2, 1)
+    tl.rack_busy_time = 1e9  # corrupt the accumulator
+    with pytest.raises(RuntimeError, match="utilization"):
+        tl.utilization(1.0)
+
+
+def test_incremental_audit_catches_overlap_and_full_rescan():
+    tl = ClusterTimeline(2, 0)
+    tl._insert("wired channel", tl.wired_intervals, (0.0, 10.0, 1))
+    tl._insert("wired channel", tl.wired_intervals, (5.0, 8.0, 2))
+    with pytest.raises(AssertionError, match="overlap"):
+        tl.assert_feasible()
+    # The incremental backlog was consumed by the failed audit; the full
+    # rescan still sees the (retained) overlap.
+    with pytest.raises(AssertionError, match="overlap"):
+        tl.assert_feasible(full=True)
+    # Disjoint commits audit clean, incrementally and fully.
+    tl2 = ClusterTimeline(2, 0)
+    for iv in [(0.0, 1.0, 1), (2.0, 3.0, 2), (1.0, 2.0, 3)]:
+        tl2._insert("wired channel", tl2.wired_intervals, iv)
+    tl2.assert_feasible()
+    tl2.assert_feasible(full=True)
+
+
+def test_incremental_audit_only_checks_new_intervals():
+    tl = ClusterTimeline(1, 0)
+    tl._insert("wired channel", tl.wired_intervals, (0.0, 1.0, 1))
+    tl.assert_feasible()
+    assert not tl._audit_backlog
+    # Corrupting retained history escapes the incremental audit (that is
+    # the point: O(new) not O(all)) but not the full rescan.
+    tl.wired_intervals.append((0.5, 0.9, 99))
+    tl.wired_intervals.sort()
+    tl.assert_feasible()  # incremental: no new commits, nothing to check
+    with pytest.raises(AssertionError, match="overlap"):
+        tl.assert_feasible(full=True)
+
+
+# ---------------------------------------------------------------------------
+# Incremental free sets
+# ---------------------------------------------------------------------------
+
+def test_free_set_matches_nonzero_reference_under_random_traffic():
+    rng = np.random.default_rng(0)
+    n = 9
+    hold = np.zeros(n)
+    fs = _FreeSet(n)
+    t = 0.0
+    for _ in range(400):
+        t += float(rng.exponential(2.0))
+        fs.advance(t, hold)
+        ref = np.nonzero(hold <= t)[0]
+        assert np.array_equal(fs.as_array(), ref)
+        # Grant a random subset of the free ids, sometimes re-extending a
+        # hold that is already in the heap (the stale-entry path).
+        for i in ref[: int(rng.integers(0, ref.size + 1))]:
+            hold[i] = t + float(rng.exponential(5.0))
+            fs.grant(int(i), float(hold[i]))
+
+
+def test_free_set_stale_heap_entry_self_corrects():
+    hold = np.zeros(3)
+    fs = _FreeSet(3)
+    hold[1] = 10.0
+    fs.grant(1, 10.0)
+    # The hold is extended after the first grant's heap entry was pushed.
+    hold[1] = 20.0
+    fs.grant(1, 20.0)
+    fs.advance(15.0, hold)  # pops the stale (10.0, 1) entry, re-checks
+    assert fs.as_array().tolist() == [0, 2]
+    fs.advance(20.0, hold)
+    assert fs.as_array().tolist() == [0, 1, 2]
+
+
+# ---------------------------------------------------------------------------
+# Streaming workload generators
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["poisson", "production"])
+def test_streaming_generators_match_list_api(kind):
+    if kind == "poisson":
+        eager = poisson_arrivals(5, rate=0.05, n_jobs=10)
+        lazy = list(stream_poisson_arrivals(5, rate=0.05, n_jobs=10))
+    else:
+        eager = production_arrivals(5, rate=0.05, n_jobs=10,
+                                    min_wireless_demand=0)
+        lazy = list(
+            stream_production_arrivals(5, rate=0.05, n_jobs=10,
+                                       min_wireless_demand=0)
+        )
+    assert len(eager) == len(lazy) == 10
+    for a, b in zip(eager, lazy):
+        assert a.time == b.time and a.job_id == b.job_id
+        assert a.family == b.family
+        assert a.inst.n_racks == b.inst.n_racks
+        assert a.inst.n_wireless == b.inst.n_wireless
+        assert np.array_equal(a.inst.job.p, b.inst.job.p)
+        assert np.array_equal(a.inst.job.edges, b.inst.job.edges)
+        assert np.array_equal(a.inst.job.d, b.inst.job.d)
+
+
+def test_streaming_generators_validate_eagerly():
+    with pytest.raises(ValueError, match="rate"):
+        stream_poisson_arrivals(0, rate=0.0, n_jobs=1)
+    with pytest.raises(ValueError, match="min_rack_demand"):
+        stream_production_arrivals(0, rate=1.0, n_jobs=1, min_rack_demand=99)
+
+
+def test_serve_accepts_lazy_stream_and_matches_list_serve():
+    kw = dict(window=5.0, policy="greedy_list", seed=2)
+    a = OnlineScheduler(6, 2, **kw).serve(
+        production_arrivals(2, rate=1 / 30, n_jobs=8)
+    )
+    b = OnlineScheduler(6, 2, **kw).serve(
+        stream_production_arrivals(2, rate=1 / 30, n_jobs=8)
+    )
+    _assert_results_identical(a, b)
+
+
+def test_unsorted_lazy_stream_is_rejected():
+    evs = production_arrivals(0, rate=1 / 30, n_jobs=4)
+    shuffled = [evs[1], evs[0], evs[2], evs[3]]
+    with pytest.raises(ValueError, match="sorted"):
+        OnlineScheduler(6, 2, policy="greedy_list").serve(iter(shuffled))
+    # A materialized (indexable) sequence is sorted for the caller, as the
+    # pre-pipeline service did.
+    res = OnlineScheduler(6, 2, policy="greedy_list", window=5.0).serve(shuffled)
+    assert [j.job_id for j in res.jobs] == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# Streaming metrics
+# ---------------------------------------------------------------------------
+
+def test_streaming_series_exact_small_sample():
+    xs = [5.0, 1.0, 9.0, 3.0, 7.0]
+    s = StreamingSeries()
+    for x in xs:
+        s.push(x)
+    assert s.count == 5 and s.min == 1.0 and s.max == 9.0
+    assert s.mean == pytest.approx(np.mean(xs))
+    for p in (0.5, 0.9, 0.99):
+        assert s.quantile(p) == pytest.approx(np.percentile(xs, 100 * p))
+
+
+def test_streaming_series_p2_tracks_true_quantiles_at_scale():
+    rng = np.random.default_rng(42)
+    xs = rng.gamma(2.0, 50.0, size=20_000)
+    s = StreamingSeries()
+    for x in xs:
+        s.push(x)
+    assert s.count == xs.size
+    assert s.mean == pytest.approx(float(xs.mean()))
+    assert s.max == float(xs.max()) and s.min == float(xs.min())
+    for p in (0.5, 0.9, 0.99):
+        true = float(np.percentile(xs, 100 * p))
+        assert s.quantile(p) == pytest.approx(true, rel=0.05)
+
+
+def test_streaming_series_empty_and_untracked():
+    s = StreamingSeries()
+    assert s.quantile(0.5) == 0.0 and s.mean == 0.0
+    for _ in range(200):
+        s.push(1.0)
+    with pytest.raises(KeyError, match="not tracked"):
+        s.quantile(0.123)
+
+
+def test_online_result_reports_streaming_percentiles():
+    evs = production_arrivals(0, rate=1 / 20, n_jobs=10)
+    res = OnlineScheduler(6, 2, window=5.0, policy="greedy_list",
+                         seed=0).serve(evs)
+    assert res.queue_stats is not None and res.queue_stats.count == 10
+    assert res.jct_stats is not None and res.jct_stats.count == 10
+    # Small-n mode: the streaming figures are the exact percentiles.
+    assert res.p50_jct == pytest.approx(float(np.percentile(res.jcts, 50)))
+    assert res.p99_queueing_delay == pytest.approx(
+        float(np.percentile(res.queueing_delays, 99))
+    )
+    assert res.peak_active >= 1
+    assert res.peak_queue_depth >= 1
+    assert res.n_served == 10 and res.n_jobs == 10
+    out = res.summary()
+    assert "queue_p50/p90/p99=" in out and "jct_p50/p90/p99=" in out
+    assert "peak_active=" in out
+
+
+def test_record_jobs_off_keeps_stats_and_counters():
+    evs = production_arrivals(1, rate=1 / 20, n_jobs=10)
+    kw = dict(window=5.0, policy="greedy_list", seed=1)
+    full = OnlineScheduler(6, 2, **kw).serve(evs)
+    lean = OnlineScheduler(6, 2, record_jobs=False, **kw).serve(evs)
+    assert lean.jobs == [] and lean.n_served == 10 and lean.n_jobs == 10
+    assert lean.horizon == full.horizon
+    assert lean.n_epochs == full.n_epochs
+    for p in (0.5, 0.9, 0.99):
+        assert lean.jct_stats.quantile(p) == full.jct_stats.quantile(p)
+        assert lean.queue_stats.quantile(p) == full.queue_stats.quantile(p)
+    assert lean.mean_jct == pytest.approx(full.mean_jct)
+    assert "jobs=10" in lean.summary()
+
+
+def test_epoch_latency_tracking_is_opt_in():
+    evs = production_arrivals(0, rate=1 / 20, n_jobs=6)
+    kw = dict(window=5.0, policy="greedy_list", seed=0)
+    off = OnlineScheduler(6, 2, **kw).serve(evs)
+    on = OnlineScheduler(6, 2, track_epoch_latency=True, **kw).serve(evs)
+    assert off.epoch_commit_latency is None
+    assert on.epoch_commit_latency is not None
+    assert len(on.epoch_commit_latency) == on.n_epochs
+    assert all(x >= 0.0 for x in on.epoch_commit_latency)
+
+
+# ---------------------------------------------------------------------------
+# Bounded re-plan + op-table cache
+# ---------------------------------------------------------------------------
+
+def test_bounded_replan_preserves_cold_commits_with_fewer_solves():
+    """Cold admission solves ignore queue history, so skipping planning
+    re-solves while the free-capacity fingerprint is unchanged cannot
+    change any committed schedule — only the solve counter."""
+    evs = production_arrivals(4, rate=1 / 8, n_jobs=6)
+    kw = dict(window=5.0, warm_start=False, require_full_demand=True,
+              preserve_order=True, solver_kwargs=FAST_SOLVER, seed=4)
+    always = OnlineScheduler(6, 2, replan="always", **kw).serve(evs)
+    bounded = OnlineScheduler(6, 2, replan="changed", **kw).serve(evs)
+    # Not _assert_results_identical: per-job n_solves differs by design.
+    assert len(always.jobs) == len(bounded.jobs)
+    for ja, jb in zip(always.jobs, bounded.jobs):
+        assert ja.admitted == jb.admitted
+        assert ja.completion == jb.completion
+        assert np.array_equal(ja.assignment, jb.assignment)
+    assert bounded.n_solves <= always.n_solves
+    assert bounded.mean_jct == pytest.approx(always.mean_jct)
+
+
+def test_schedule_fleet_accepts_prebuilt_op_tables():
+    rng = np.random.default_rng(0)
+    insts = [
+        ProblemInstance(job=random_job(np.random.default_rng(s), None,
+                                       n_tasks=5, rho=1.0),
+                        n_racks=3, n_wireless=1)
+        for s in range(3)
+    ]
+    base = schedule_fleet(insts, seed=0, **FAST_SOLVER)
+    cached = schedule_fleet(
+        insts, seed=0, op_tables=[build_op_tables(i) for i in insts],
+        **FAST_SOLVER,
+    )
+    for a, b in zip(base.results, cached.results):
+        assert a.makespan == b.makespan
+        assert np.array_equal(a.best_assignment, b.best_assignment)
+        assert a.n_candidates == b.n_candidates
+        assert a.n_pruned == b.n_pruned
+    with pytest.raises(ValueError, match="one OpTables"):
+        schedule_fleet(insts, op_tables=[build_op_tables(insts[0])])
+
+
+# ---------------------------------------------------------------------------
+# Stress lane smoke
+# ---------------------------------------------------------------------------
+
+def test_stress_lane_smoke_emits_stress_record():
+    from benchmarks import common
+    from benchmarks.online_serving import run_stress
+
+    common.reset_results()
+    try:
+        ratio = run_stress(n_jobs=300)
+        assert np.isfinite(ratio) and ratio > 0
+        rec = common.RESULTS[-1]
+        assert rec["kind"] == "stress"
+        m = rec["metrics"]
+        assert m["n_jobs"] == 300
+        assert m["latency_ratio"] == pytest.approx(ratio, abs=5e-4)
+        for k in ("queue_p50", "queue_p90", "queue_p99",
+                  "jct_p50", "jct_p90", "jct_p99",
+                  "peak_active", "peak_queue", "intervals_compacted"):
+            assert k in m
+    finally:
+        common.reset_results()

@@ -14,6 +14,12 @@ comparisons that back the tables in ``docs/benchmarks.md``.
                           channel-proven backfilling on a production mix
                           with rack- and wireless-demand spread (per-seed
                           mean JCT + backfill counters; the docs table).
+  run_arbitration_modes() — FIFO vs sigma (bottleneck-first coflow
+                          order) vs search (portfolio permutation
+                          neighborhoods) cross-job commit-order
+                          arbitration, on dense single-epoch wired
+                          bursts and on the production mix (per-seed
+                          mean JCT + queueing delta; the docs table).
   run_stress()          — ``--stress``: sustained-throughput lane. Streams
                           a 100k-arrival production trace through the
                           O(active) serving core (lazy workload iterator,
@@ -256,6 +262,107 @@ def run_admission_modes() -> None:
     )
 
 
+def _dense_burst(seed: int, n_jobs: int = 4):
+    """One admission epoch of simultaneous wired-heavy map-reduce jobs
+    with a per-seed spread of transfer volumes (rho in [0.25, 8]) — the
+    regime where the cross-job commit order *is* the coflow schedule.
+    Every job demands 2 racks of 8, so the batch is co-admitted and the
+    wired channel is the only shared resource."""
+    import dataclasses
+
+    from repro.core.dag import make_onestage_mapreduce
+    from repro.online import trace_arrivals
+
+    rng = np.random.default_rng(seed)
+    rhos = rng.uniform(0.25, 8.0, size=n_jobs)
+    jobs = [
+        make_onestage_mapreduce(rng, n_map=3, n_reduce=2, rho=float(r))
+        for r in rhos
+    ]
+    evs = trace_arrivals([0.0] * n_jobs, jobs, n_racks=8, n_wireless=0)
+    return [
+        dataclasses.replace(e, inst=dataclasses.replace(e.inst, n_racks=2))
+        for e in evs
+    ]
+
+
+def run_arbitration_modes() -> None:
+    """FIFO vs sigma vs search cross-job commit-order arbitration.
+
+    Both workloads run the greedy-list policy — the order-sensitive
+    path, where each job is *solved* at commit time against the busy
+    intervals of the epoch's earlier commits (the fleet engine already
+    serializes an epoch's transfers at solve time, so reordering its
+    pre-solved schedules is a no-op by design). ``dense`` is a
+    single-epoch burst of wired-heavy jobs: the epoch's replayed total
+    JCT is the stream's total JCT, so ``search`` (FIFO-first, strict
+    improvement only) is never worse than FIFO *by construction* and the
+    measured deltas are pure ordering gains. ``production`` is the usual
+    arrival mix at a queue-building rate — reordering one epoch shifts
+    later residuals, so gains are no longer guaranteed epoch-by-epoch;
+    the table shows they hold end to end. ``sigma`` commits the
+    bottleneck-first heuristic order unconditionally (no replay search),
+    so it can lose where the wired-volume proxy misranks a batch. The
+    docs/benchmarks.md arbitration-mode table is this function's output.
+    """
+    n_seeds = 6 if not FULL else 10
+    modes = ("fifo", "sigma", "search")
+    sections = (
+        ("dense", lambda seed: _dense_burst(seed),
+         dict(n_racks=8, n_wireless=0, window=1.0)),
+        ("production", lambda seed: production_arrivals(
+            seed, rate=1 / 4, n_jobs=12, n_racks=CLUSTER["n_racks"],
+            n_wireless=0, min_rack_demand=2),
+         dict(n_racks=CLUSTER["n_racks"], n_wireless=0, window=5.0)),
+    )
+    for section, make, cfg in sections:
+        means = {m: [] for m in modes}
+        wins = losses = reordered = evals = 0
+        for seed in range(n_seeds):
+            evs = make(seed)
+            per_seed = {}
+            t0 = time.perf_counter()
+            for mode in modes:
+                res = OnlineScheduler(
+                    cfg["n_racks"], cfg["n_wireless"], window=cfg["window"],
+                    policy="greedy_list", seed=seed, arbitration=mode,
+                ).serve(evs)
+                per_seed[mode] = res
+                means[mode].append(res.mean_jct)
+            wall = time.perf_counter() - t0
+            fifo, search = per_seed["fifo"], per_seed["search"]
+            d = fifo.mean_jct - search.mean_jct
+            wins += d > 1e-9
+            losses += d < -1e-9
+            reordered += search.n_epochs_reordered
+            evals += search.n_order_evals
+            emit(
+                f"online_arbitration_{section}_seed{seed}",
+                1e6 * wall / (len(modes) * len(evs)),
+                f"fifo_jct={fifo.mean_jct:.1f}"
+                f";sigma_jct={per_seed['sigma'].mean_jct:.1f}"
+                f";search_jct={search.mean_jct:.1f}"
+                f";search_delta={d:.1f}"
+                f";fifo_queue={fifo.mean_queueing_delay:.1f}"
+                f";search_queue={search.mean_queueing_delay:.1f}"
+                f";reordered={search.n_epochs_reordered}"
+                f";order_evals={search.n_order_evals}"
+                f";gain={search.arbitration_gain:.1f}",
+            )
+        mean_of = {m: float(np.mean(v)) for m, v in means.items()}
+        emit(
+            f"online_arbitration_{section}_summary",
+            0,
+            f"fifo_mean_jct={mean_of['fifo']:.2f}"
+            f";sigma_mean_jct={mean_of['sigma']:.2f}"
+            f";search_mean_jct={mean_of['search']:.2f}"
+            f";search_reduction="
+            f"{100 * (1 - mean_of['search'] / mean_of['fifo']):.2f}%"
+            f";search_wins={wins}/{n_seeds};search_losses={losses}/{n_seeds}"
+            f";epochs_reordered={reordered};order_evals={evals}",
+        )
+
+
 # Stress lane configuration: a throughput-oriented serving setup — the
 # greedy-list policy (per-job host heuristic, no engine launches) admits on
 # residual capacity with overtaking, the timeline compacts every
@@ -336,7 +443,8 @@ def main(argv=None):
     parser.add_argument(
         "--skip-sweep",
         action="store_true",
-        help="run only the warm-vs-cold and admission-mode sections",
+        help="run only the warm-vs-cold, admission-mode and "
+        "arbitration-mode sections",
     )
     parser.add_argument(
         "--stress",
@@ -375,6 +483,7 @@ def main(argv=None):
         run()
     run_warm_vs_cold()
     run_admission_modes()
+    run_arbitration_modes()
     if args.json:
         common.write_json(args.json, bench="online_serving")
 

@@ -12,6 +12,9 @@ Layers:
   vectorized                  — beyond-paper JAX-batched assignment search
   portfolio                   — refinement strategy portfolio (mutation /
                                 crossover / annealing + yield allocator)
+  coflow                      — beyond-paper coflow view of an admission
+                                epoch + commit-order search (sigma
+                                ordering, permutation portfolio)
   baselines                   — §V comparison schedulers
 """
 
@@ -45,6 +48,7 @@ from repro.core.vectorized import (
     vectorized_search,
 )
 from repro.core.portfolio import (
+    ARBITRATION_STRATEGIES,
     DEFAULT_PORTFOLIO,
     AnnealingStrategy,
     CrossoverStrategy,
@@ -53,6 +57,16 @@ from repro.core.portfolio import (
     Strategy,
     StrategyStats,
     build_strategies,
+    register_arbitration_strategy,
+)
+from repro.core.coflow import (
+    Coflow,
+    OrderSearchResult,
+    build_order_strategies,
+    coflow_from_instance,
+    coflow_from_schedule,
+    search_commit_order,
+    sigma_order,
 )
 from repro.core.baselines import (
     BASELINES,
@@ -85,6 +99,10 @@ __all__ = [
     "DEFAULT_PORTFOLIO", "AnnealingStrategy", "CrossoverStrategy",
     "MutationStrategy", "Portfolio", "Strategy", "StrategyStats",
     "build_strategies",
+    "ARBITRATION_STRATEGIES", "register_arbitration_strategy",
+    "Coflow", "OrderSearchResult", "build_order_strategies",
+    "coflow_from_instance", "coflow_from_schedule", "search_commit_order",
+    "sigma_order",
     "BASELINES", "ONLINE_BASELINES", "fifo_solo_schedule",
     "g_list_master_schedule", "g_list_schedule", "greedy_list_online_schedule",
     "list_schedule", "partition_schedule", "random_schedule",

@@ -60,8 +60,10 @@ __all__ = [
     "AnnealingStrategy",
     "Portfolio",
     "STRATEGIES",
+    "ARBITRATION_STRATEGIES",
     "DEFAULT_PORTFOLIO",
     "build_strategies",
+    "register_arbitration_strategy",
     "spec_length",
     "merge_strategy_stats",
     "mutate_pool",
@@ -379,6 +381,30 @@ STRATEGIES = {
     "crossover": CrossoverStrategy,
     "annealing": AnnealingStrategy,
 }
+
+# Arbitration-order strategies: the same Strategy protocol, but proposals
+# are int32[count, n_jobs] *commit permutations* of one admission epoch's
+# batch instead of task->rack assignments (``view.best_rack`` holds the
+# incumbent order; every row must be a permutation of ``range(n_jobs)``).
+# A separate registry keeps the two search spaces from mixing — an
+# assignment strategy in an order portfolio (or vice versa) would propose
+# out-of-space rows. Members live in :mod:`repro.core.coflow`, which
+# registers them at import via :func:`register_arbitration_strategy`;
+# the registry is defined here so the driver machinery (one
+# :class:`Portfolio` per epoch) and both registries share one module.
+ARBITRATION_STRATEGIES: dict[str, type] = {}
+
+
+def register_arbitration_strategy(cls: type) -> type:
+    """Class decorator: add an arbitration-order Strategy to the registry
+    under its ``name`` (duplicate names raise — they would shadow)."""
+    name = getattr(cls, "name", None)
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"arbitration strategy {cls!r} needs a `name`")
+    if name in ARBITRATION_STRATEGIES:
+        raise ValueError(f"duplicate arbitration strategy name {name!r}")
+    ARBITRATION_STRATEGIES[name] = cls
+    return cls
 
 # The full portfolio spec (the ``strategies="portfolio"`` alias).
 DEFAULT_PORTFOLIO = ("mutation", "crossover", "annealing")

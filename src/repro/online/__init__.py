@@ -11,13 +11,21 @@ Layers:
 
   workload  — seeded Poisson / production-mix / trace arrival generators
   cluster   — global cluster timeline, residual-capacity instances,
-              cross-job channel arbitration + feasibility audit
+              cross-job channel arbitration + commit-order replay +
+              feasibility audit
   service   — admission event loop (FIFO / backfilling / free overtaking)
-              + warm-started re-optimization
+              + warm-started re-optimization + coflow-aware commit-order
+              arbitration (fifo / sigma / search)
   metrics   — per-job queueing/JCT records and aggregate OnlineResult
 """
 
-from repro.online.cluster import ClusterTimeline, ResidualView
+from repro.online.cluster import (
+    ClusterTimeline,
+    OrderReplay,
+    ResidualView,
+    replay_commit_order,
+    reservation_backfill_safe,
+)
 from repro.online.metrics import JobMetrics, OnlineResult, StreamingSeries
 from repro.online.service import DEFAULT_SOLVER_KWARGS, OnlineScheduler
 from repro.online.workload import (
@@ -36,8 +44,11 @@ __all__ = [
     "JobMetrics",
     "OnlineResult",
     "OnlineScheduler",
+    "OrderReplay",
     "ResidualView",
     "StreamingSeries",
+    "replay_commit_order",
+    "reservation_backfill_safe",
     "poisson_arrivals",
     "production_arrivals",
     "stream_poisson_arrivals",

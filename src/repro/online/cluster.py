@@ -83,7 +83,15 @@ from repro.core.instance import CH_WIRED, ProblemInstance
 from repro.core.schedule import Schedule
 from repro.core.simulator import simulate
 
-__all__ = ["ClusterTimeline", "ResidualView"]
+__all__ = [
+    "ClusterTimeline",
+    "OrderReplay",
+    "ResidualView",
+    "job_holds",
+    "replay_commit_order",
+    "reservation_backfill_safe",
+    "wired_windows",
+]
 
 # Overlap tolerance for the feasibility audit. Grant/release comparisons are
 # exact (see the module docstring); this only absorbs float noise when two
@@ -220,7 +228,12 @@ class ClusterTimeline:
         i = bisect.bisect_right(intervals, t, key=_END)
         return intervals[i:]
 
-    def channel_busy(self, view: ResidualView, t: float) -> dict:
+    def channel_busy(
+        self,
+        view: ResidualView,
+        t: float,
+        wired_extra: list[tuple[float, float]] | tuple = (),
+    ) -> dict:
         """Committed busy intervals on ``view``'s physical channels, mapped
         into the view's local frame (channel ids CH_WIRED / 2+k, times
         relative to ``t``). Intervals ending at or before ``t`` are
@@ -230,6 +243,14 @@ class ClusterTimeline:
         job's channels are clear from ``t`` on. O(log n + hits) per
         channel on the sorted interval index; ``t`` must not precede the
         compaction frontier (retired intervals cannot be reconstructed).
+
+        ``wired_extra`` appends *hypothetical* wired intervals in absolute
+        time on top of the committed index — the trial-commit feed of
+        :func:`replay_commit_order`, which accumulates the wired windows
+        earlier jobs of a candidate order would commit without mutating
+        the timeline. The simulator sorts seeded intervals itself, so the
+        extras need no order. With the default empty extras the answer is
+        bit-identical to the two-argument form.
         """
         if t < self.compact_frontier:
             raise RuntimeError(
@@ -239,6 +260,9 @@ class ClusterTimeline:
             )
         busy: dict[int, list[tuple[float, float]]] = {}
         wired = [(s - t, e - t) for s, e, _ in self._tail(self.wired_intervals, t)]
+        for s, e in wired_extra:
+            if e > t:
+                wired.append((s - t, e - t))
         if wired:
             busy[CH_WIRED] = wired
         for k in range(view.inst.n_wireless):
@@ -251,7 +275,13 @@ class ClusterTimeline:
                 busy[2 + k] = ivs
         return busy
 
-    def arbitrate(self, view: ResidualView, sched: Schedule, t: float) -> Schedule:
+    def arbitrate(
+        self,
+        view: ResidualView,
+        sched: Schedule,
+        t: float,
+        wired_extra: list[tuple[float, float]] | tuple = (),
+    ) -> Schedule:
         """Sequence ``sched`` onto the shared physical channels at ``t``.
 
         The cross-job arbitration pass: replays the schedule through the
@@ -261,9 +291,11 @@ class ClusterTimeline:
         job's transfers gap-insert around other jobs'). Deterministic for
         a fixed commit order, and the identity when the job's channels
         carry no committed intervals past ``t`` — so an uncontended
-        commit stays bit-for-bit the engine's schedule.
+        commit stays bit-for-bit the engine's schedule. ``wired_extra``
+        (absolute-time hypothetical wired intervals) is the trial-commit
+        hook of :func:`replay_commit_order`; empty by default.
         """
-        busy = self.channel_busy(view, t)
+        busy = self.channel_busy(view, t, wired_extra=wired_extra)
         if not busy:
             return sched
         return simulate(view.inst, sched.rack, chan=sched.chan, channel_busy=busy)
@@ -471,3 +503,205 @@ class ClusterTimeline:
                     "timeline is not channel-feasible"
                 )
         return {name: min(max(frac, 0.0), 1.0) for name, frac in util.items()}
+
+
+# -- commit-order replay ------------------------------------------------------
+#
+# Within one admission epoch the only *shared* resource is the wired
+# channel: co-admitted jobs draw disjoint rack and subchannel grants from
+# shrinking pools, and every subchannel a job can touch already carries its
+# committed intervals in the index (interval-aware grants included). So a
+# candidate commit order can be trial-run exactly by accumulating only the
+# wired windows earlier trial jobs would commit and feeding them to
+# ``arbitrate`` via ``wired_extra`` — no timeline mutation, bit-identical
+# to really committing in that order. These helpers are the evaluation side
+# of the arbitration-order search in :mod:`repro.core.coflow`.
+
+
+def wired_windows(
+    view: ResidualView, sched: Schedule, t: float
+) -> list[tuple[float, float]]:
+    """Absolute-time wired-channel transfer windows one commit would add
+    (exactly the intervals :meth:`ClusterTimeline.commit` inserts on the
+    wired index; zero-size transfers occupy nothing)."""
+    inst = view.inst
+    if not inst.job.n_edges:
+        return []
+    dur = inst.duration_on(sched.chan)
+    out = []
+    for e in range(inst.job.n_edges):
+        d = float(dur[e])
+        if d > 0.0 and int(sched.chan[e]) == CH_WIRED:
+            s = t + float(sched.tstart[e])
+            out.append((s, s + d))
+    return out
+
+
+def job_holds(
+    view: ResidualView, sched: Schedule, t: float
+) -> tuple[dict[int, float], dict[int, float]]:
+    """Per-physical-resource hold times one commit would take: a
+    ``(rack_holds, wireless_holds)`` pair mapping physical id to the
+    absolute release time, mirroring :meth:`ClusterTimeline.commit`'s
+    hold updates (callers ``max`` them into existing holds)."""
+    inst = view.inst
+    job = inst.job
+    rack_holds: dict[int, float] = {}
+    wireless_holds: dict[int, float] = {}
+    for i in range(inst.n_racks):
+        on_i = sched.rack == i
+        if not on_i.any():
+            continue
+        fin = float(np.max(sched.start[on_i] + job.p[on_i]))
+        rack_holds[int(view.rack_map[i])] = t + fin
+    if job.n_edges:
+        dur = inst.duration_on(sched.chan)
+        for e in range(job.n_edges):
+            c, d = int(sched.chan[e]), float(dur[e])
+            if d <= 0.0 or c < 2:
+                continue
+            phys = int(view.wireless_map[c - 2])
+            end = t + float(sched.tstart[e]) + d
+            if end > wireless_holds.get(phys, -np.inf):
+                wireless_holds[phys] = end
+    return rack_holds, wireless_holds
+
+
+def reservation_backfill_safe(
+    rack_hold: np.ndarray,
+    wireless_hold: np.ndarray,
+    n_racks_granted: int,
+    n_wireless_granted: int,
+    completion: float,
+    t: float,
+    hol_need: tuple[int, int],
+) -> bool:
+    """Prove (or refuse) that a backfill commit cannot delay the blocked
+    head-of-line job's admission epoch, from the hold vectors alone.
+
+    The head job's *reservation* is the earliest time its needed racks and
+    subchannels can all be free given ``rack_hold`` / ``wireless_hold``.
+    The commit is safe when either the candidate's post-arbitration
+    ``completion`` lands at or before the reservation (every hold a job
+    takes is released by its completion, so everything the candidate
+    touches is free again in time), or — shadow slack — the reservation
+    time keeps enough free racks/subchannels for the head job even with
+    the candidate's grant removed for good. Pure function of the hold
+    vectors so the service's live commits and
+    :func:`replay_commit_order`'s trial commits run the *same* proof
+    (the service method delegates here).
+    """
+    need_r, need_w = hol_need
+    t_res = max(t, float(np.sort(rack_hold)[need_r - 1]))
+    if need_w:
+        t_res = max(t_res, float(np.sort(wireless_hold)[need_w - 1]))
+    if completion <= t_res:
+        return True
+    free_r = int(np.sum(rack_hold <= t_res))
+    if free_r - n_racks_granted < need_r:
+        return False
+    if need_w:
+        free_w = int(np.sum(wireless_hold <= t_res))
+        if free_w - n_wireless_granted < need_w:
+            return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class OrderReplay:
+    """Outcome of trial-committing one epoch batch in one candidate order.
+
+    ``placed`` / ``completions`` are indexed by *batch position* (not
+    commit rank); a position is ``None`` when the trial's backfill proof
+    rejected that candidate (it would stay queued). ``objective`` is the
+    lexicographic figure the order search minimizes: reject as few
+    backfill candidates as possible, then minimize the batch's total
+    arrival-to-completion time.
+    """
+
+    order: tuple[int, ...]
+    placed: list
+    completions: list
+    n_rejected: int
+    total_jct: float
+
+    @property
+    def objective(self) -> tuple[int, float]:
+        return (self.n_rejected, self.total_jct)
+
+
+def replay_commit_order(
+    cluster: ClusterTimeline,
+    t: float,
+    views: list[ResidualView],
+    order,
+    *,
+    scheds: list[Schedule] | None = None,
+    solver=None,
+    arrivals: list[float] | None = None,
+    is_backfill: list[bool] | None = None,
+    hol_need: tuple[int, int] | None = None,
+) -> OrderReplay:
+    """Trial-run one commit permutation of an epoch batch, mutating nothing.
+
+    Mirrors the service's commit loop exactly: jobs are arbitrated in
+    ``order`` (each seeing the wired windows of every earlier trial
+    commit via ``wired_extra``), and backfill candidates run the same
+    reservation/shadow-slack proof on trial copies of the hold vectors —
+    so really committing in ``order`` afterwards produces bit-identical
+    schedules, completions, and backfill decisions.
+
+    Exactly one of ``scheds`` (pre-solved schedules, the fleet policy) or
+    ``solver`` (``solver(view, busy) -> Schedule``, lazy baselines whose
+    placement depends on the busy intervals seen) must be given.
+    ``arrivals`` (defaults to ``t``) weight each job's completion into
+    ``total_jct``.
+    """
+    n = len(views)
+    if (scheds is None) == (solver is None):
+        raise ValueError("pass exactly one of scheds= or solver=")
+    order = tuple(int(i) for i in order)
+    if sorted(order) != list(range(n)):
+        raise ValueError(f"order {order} is not a permutation of range({n})")
+    arr = [float(t)] * n if arrivals is None else [float(a) for a in arrivals]
+    bf = [False] * n if is_backfill is None else list(is_backfill)
+    need_holds = any(bf)
+    rack_hold = cluster.rack_hold.copy() if need_holds else None
+    wireless_hold = cluster.wireless_hold.copy() if need_holds else None
+    wired_extra: list[tuple[float, float]] = []
+    placed_out: list = [None] * n
+    completions: list = [None] * n
+    n_rejected = 0
+    total_jct = 0.0
+    for pos in order:
+        view = views[pos]
+        if solver is not None:
+            busy = cluster.channel_busy(view, t, wired_extra=wired_extra)
+            placed = solver(view, busy)
+        else:
+            placed = cluster.arbitrate(view, scheds[pos], t, wired_extra=wired_extra)
+        comp = t + float(placed.makespan)
+        if bf[pos] and not reservation_backfill_safe(
+            rack_hold,
+            wireless_hold,
+            view.inst.n_racks,
+            view.inst.n_wireless,
+            comp,
+            t,
+            hol_need,
+        ):
+            n_rejected += 1
+            continue
+        placed_out[pos] = placed
+        completions[pos] = comp
+        total_jct += comp - arr[pos]
+        wired_extra.extend(wired_windows(view, placed, t))
+        if need_holds:
+            r_holds, w_holds = job_holds(view, placed, t)
+            for phys, h in r_holds.items():
+                if h > rack_hold[phys]:
+                    rack_hold[phys] = h
+            for phys, h in w_holds.items():
+                if h > wireless_hold[phys]:
+                    wireless_hold[phys] = h
+    return OrderReplay(order, placed_out, completions, n_rejected, total_jct)

@@ -174,7 +174,21 @@ class StreamingSeries:
                 f"quantile {p} not tracked (tracked: {self.quantiles}); "
                 "construct the series with it in `quantiles`"
             )
-        return float(sketches[p].value)
+        # P² safety clamp. Right after the exact->sketch switch the
+        # estimator has seen only a handful of post-seed samples, and the
+        # parabolic marker adjustment can place the target marker anywhere
+        # between its neighbors — for extreme quantiles that is a poor
+        # (though finite) estimate; with non-finite inputs the marker
+        # heights can be poisoned into NaN outright. Any quantile of the
+        # observed stream lies in [min, max] by definition, so clamp the
+        # sketch value into the exact observed range and fall back to the
+        # nearest observed extreme when the sketch state is not finite —
+        # percentile accessors then never return NaN or an out-of-range
+        # value, no matter how few samples arrived past the boundary.
+        v = float(sketches[p].value)
+        if not np.isfinite(v):
+            v = self._max if p >= 0.5 else self._min
+        return float(min(max(v, self._min), self._max))
 
     @property
     def p50(self) -> float:
@@ -294,6 +308,16 @@ class OnlineResult:
         arbitrate-and-commit stage (populated only under
         ``track_epoch_latency=True``; the stress lane's flat-latency
         check reads it).
+      arbitration: cross-job commit-order policy the service ran
+        (``"fifo"`` / ``"sigma"`` / ``"search"``).
+      n_order_evals: unique commit orders trial-replayed by the
+        arbitration-order search across all epochs (0 under FIFO).
+      n_epochs_reordered: epochs whose committed order differed from
+        queue order.
+      arbitration_gain: summed per-epoch replayed total-JCT delta of the
+        committed order vs FIFO (positive = the reordering improved the
+        batch; sigma commits its order unconditionally, so its gain can
+        go negative).
     """
 
     jobs: list[JobMetrics]
@@ -318,6 +342,10 @@ class OnlineResult:
     peak_queue_depth: int = 0
     n_served: int = 0
     epoch_commit_latency: "list[float] | None" = None
+    arbitration: str = "fifo"
+    n_order_evals: int = 0
+    n_epochs_reordered: int = 0
+    arbitration_gain: float = 0.0
 
     @property
     def jcts(self) -> np.ndarray:
@@ -403,6 +431,12 @@ class OnlineResult:
         """One-line human summary (used by the example and benchmarks)."""
         jps = self.jobs_per_solver_second
         jps_s = f"{jps:.2f}" if np.isfinite(jps) else "inf"
+        arb = (
+            f"arb={self.arbitration} reordered={self.n_epochs_reordered} "
+            f"gain={self.arbitration_gain:.1f} "
+            if self.arbitration != "fifo"
+            else ""
+        )
         return (
             f"policy={self.policy} warm={self.warm_start} jobs={self.n_jobs} "
             f"mean_jct={self.mean_jct:.1f} p95_jct={self.p95_jct:.1f} "
@@ -417,6 +451,7 @@ class OnlineResult:
             f"{self.rack_utilization:.2f}/{self.wired_utilization:.2f}/"
             f"{self.wireless_utilization:.2f} "
             f"epochs={self.n_epochs} solves={self.n_solves} "
+            f"{arb}"
             f"backfilled={self.n_backfilled} "
             f"pruned={self.n_pruned}/{self.n_candidates} "
             f"jobs_per_solver_s={jps_s} solver_wall={self.solver_wall:.2f}s"

@@ -94,10 +94,21 @@ from typing import Iterable, Iterator, Sequence
 import numpy as np
 
 from repro.core.baselines import ONLINE_BASELINES
+from repro.core.coflow import (
+    coflow_from_instance,
+    coflow_from_schedule,
+    search_commit_order,
+    sigma_order,
+)
 from repro.core.schedule import Schedule
 from repro.core.simulator import OpTables, build_op_tables
 from repro.core.vectorized import schedule_fleet
-from repro.online.cluster import ClusterTimeline, ResidualView
+from repro.online.cluster import (
+    ClusterTimeline,
+    ResidualView,
+    replay_commit_order,
+    reservation_backfill_safe,
+)
 from repro.online.metrics import JobMetrics, OnlineResult, StreamingSeries
 from repro.online.workload import ArrivalEvent
 
@@ -115,9 +126,16 @@ DEFAULT_SOLVER_KWARGS = dict(
 )
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class _PendingJob:
-    """Queue entry: one arrived, not-yet-admitted job."""
+    """Queue entry: one arrived, not-yet-admitted job.
+
+    Identity equality (``eq=False``): queue membership is by object, and
+    the generated field-wise ``__eq__`` would compare nested numpy arrays
+    (ambiguous truth value) the moment ``list.remove`` scans past a
+    *different* entry with an equal arrival time — which reordered
+    commits do routinely.
+    """
 
     event: ArrivalEvent
     n_solves: int = 0
@@ -284,6 +302,8 @@ class _ServeState:
             "epochs": 0, "batches": 0, "solves": 0,
             "candidates": 0, "pruned": 0, "wall": 0.0,
             "backfilled": 0, "backfill_rejected": 0,
+            "order_evals": 0, "epochs_reordered": 0,
+            "arbitration_gain": 0.0,
         }
     )
     peak_active: int = 0
@@ -362,6 +382,32 @@ class OnlineScheduler:
       track_epoch_latency: record the wall-clock seconds of each epoch's
         arbitrate-and-commit stage on ``OnlineResult.epoch_commit_latency``
         (the stress lane's flat-latency check; off by default).
+      arbitration: cross-job commit-order policy within an epoch.
+        ``"fifo"`` (default) commits in queue order — bit-identical to
+        the pre-coflow service on every stream. ``"sigma"`` commits in
+        the Sincronia-style bottleneck-first coflow order
+        (:func:`repro.core.coflow.sigma_order`). ``"search"`` evaluates
+        candidate orders by trial-replaying them through the timeline's
+        ``channel_busy`` hook (:func:`repro.online.cluster
+        .replay_commit_order`) and commits the best: small batches are
+        solved exactly by permutation enumeration, larger ones run the
+        portfolio-driven neighborhood search seeded with FIFO and sigma
+        — FIFO is always evaluated, so a searched epoch never commits an
+        order with a worse replayed objective than FIFO (rejected
+        backfills first, then total batch JCT).
+      arbitration_rounds / arbitration_pool: neighborhood-search budget
+        for ``arbitration="search"`` on batches too large to enumerate —
+        rounds of the portfolio allocator and candidate orders per round.
+      wireless_grants: ``"hold"`` (default) grants a wireless subchannel
+        only when free (its hold has expired) — exclusive grants, the
+        pre-coflow behavior. ``"interval"`` additionally lets an epoch's
+        admission pool reach subchannels still *held* by running jobs
+        (free ones first): the busy-interval index proves exactly which
+        windows are taken, so a new job's transfers gap-insert around the
+        holder's — disjointness is guaranteed by the same arbitration
+        pass as the wired channel (the end-of-serve audit covers it).
+        Trades earlier admission for possible channel queueing on the
+        shared subchannel.
     """
 
     def __init__(
@@ -383,6 +429,10 @@ class OnlineScheduler:
         replan: str = "always",
         record_jobs: bool = True,
         track_epoch_latency: bool = False,
+        arbitration: str = "fifo",
+        arbitration_rounds: int = 2,
+        arbitration_pool: int = 8,
+        wireless_grants: str = "hold",
     ):
         if policy != "fleet" and policy not in ONLINE_BASELINES:
             raise ValueError(
@@ -403,6 +453,14 @@ class OnlineScheduler:
             raise ValueError("compact_interval must be non-negative")
         if replan not in ("always", "changed"):
             raise ValueError("replan must be 'always' or 'changed'")
+        if arbitration not in ("fifo", "sigma", "search"):
+            raise ValueError("arbitration must be 'fifo', 'sigma' or 'search'")
+        if arbitration_rounds < 0:
+            raise ValueError("arbitration_rounds must be non-negative")
+        if arbitration_pool < 1:
+            raise ValueError("arbitration_pool must be positive")
+        if wireless_grants not in ("hold", "interval"):
+            raise ValueError("wireless_grants must be 'hold' or 'interval'")
         self.n_racks = int(n_racks)
         self.n_wireless = int(n_wireless)
         self.window = float(window)
@@ -421,6 +479,10 @@ class OnlineScheduler:
         self.replan = replan
         self.record_jobs = bool(record_jobs)
         self.track_epoch_latency = bool(track_epoch_latency)
+        self.arbitration = arbitration
+        self.arbitration_rounds = int(arbitration_rounds)
+        self.arbitration_pool = int(arbitration_pool)
+        self.wireless_grants = wireless_grants
 
     # -- public API ----------------------------------------------------------
 
@@ -505,6 +567,10 @@ class OnlineScheduler:
             peak_queue_depth=st.peak_queue,
             n_served=st.n_served,
             epoch_commit_latency=st.epoch_latency,
+            arbitration=self.arbitration,
+            n_order_evals=st.counters["order_evals"],
+            n_epochs_reordered=st.counters["epochs_reordered"],
+            arbitration_gain=st.counters["arbitration_gain"],
         )
 
     # -- stage 1: collect ----------------------------------------------------
@@ -562,6 +628,20 @@ class OnlineScheduler:
         # timeline's arbitration pass.
         pool = st.free_r.as_array()
         pool_w = st.free_w.as_array()
+        if self.wireless_grants == "interval" and self.n_wireless:
+            # Interval-aware grants: subchannels still held by running
+            # jobs join the back of the epoch pool (free ones are granted
+            # first). A job granted a held subchannel gap-inserts its
+            # transfers around the holder's committed windows — the same
+            # arbitration pass that already shares the wired channel —
+            # so exclusivity of the *grant* is relaxed while per-interval
+            # disjointness stays audited. Racks stay exclusive: the
+            # simulator re-derives only channel times, never rack times.
+            held = np.setdiff1d(
+                np.arange(self.n_wireless, dtype=np.int64), pool_w
+            )
+            if held.size:
+                pool_w = np.concatenate([pool_w, held])
         admit, views, is_backfill = [], [], []
         blocked = False  # head-of-line blocked (order-preserving modes)
         for p in st.pending:
@@ -690,21 +770,21 @@ class OnlineScheduler:
         Either branch preserves the invariant that at the current
         reservation the head job's demand is satisfiable, so the head job
         is admitted at the first wakeup past it — exactly as it would be
-        with no overtaking (backfill completions only *add* wakeups)."""
-        need_r, need_w = hol_need
-        t_res = max(t, float(np.sort(cluster.rack_hold)[need_r - 1]))
-        if need_w:
-            t_res = max(t_res, float(np.sort(cluster.wireless_hold)[need_w - 1]))
-        if completion <= t_res:
-            return True
-        free_r = int(np.sum(cluster.rack_hold <= t_res))
-        if free_r - view.inst.n_racks < need_r:
-            return False
-        if need_w:
-            free_w = int(np.sum(cluster.wireless_hold <= t_res))
-            if free_w - view.inst.n_wireless < need_w:
-                return False
-        return True
+        with no overtaking (backfill completions only *add* wakeups).
+
+        The proof itself is the pure hold-vector function
+        :func:`repro.online.cluster.reservation_backfill_safe`, shared
+        with the order search's trial replay so a replayed epoch makes
+        bit-identical backfill decisions."""
+        return reservation_backfill_safe(
+            cluster.rack_hold,
+            cluster.wireless_hold,
+            view.inst.n_racks,
+            view.inst.n_wireless,
+            completion,
+            t,
+            hol_need,
+        )
 
     def _commit_job(
         self,
@@ -745,9 +825,9 @@ class OnlineScheduler:
         new_completions: list[float] = []
         committed: list[_PendingJob] = []
         if self.policy == "fleet":
-            for p, view, bf, res in zip(
-                plan.admit, plan.views, plan.is_backfill, plan.results
-            ):
+            serve_scheds: list[Schedule] = []
+            serve_mks: list[float] = []
+            for p, view, res in zip(plan.admit, plan.views, plan.results):
                 sched, mk = res.schedule, res.makespan
                 if (
                     self.warm_start
@@ -759,11 +839,16 @@ class OnlineScheduler:
                     # not beat the chain's best simulated schedule for
                     # this exact resource shape, so serve the incumbent.
                     sched, mk = p.best_sched, p.best_makespan
+                serve_scheds.append(sched)
+                serve_mks.append(mk)
+            order = self._commit_order(t, st, plan, serve_scheds)
+            for i in order:
+                p, view, bf = plan.admit[i], plan.views[i], plan.is_backfill[i]
                 # Cross-job arbitration: sequence the served schedule onto
-                # the shared physical channels (deterministic commit
-                # order = queue order; identity when the channels are
-                # clear).
-                placed = cluster.arbitrate(view, sched, t)
+                # the shared physical channels in the chosen commit order
+                # (queue order under the default ``arbitration="fifo"``;
+                # identity when the channels are clear).
+                placed = cluster.arbitrate(view, serve_scheds[i], t)
                 if bf and not self._backfill_safe(
                     cluster, view, t + placed.makespan, t, plan.hol_need
                 ):
@@ -773,7 +858,7 @@ class OnlineScheduler:
                     # solve already fed the warm-start incumbents above.
                     st.counters["backfill_rejected"] += 1
                     continue
-                comp = self._commit_job(t, st, p, view, placed, mk, bf)
+                comp = self._commit_job(t, st, p, view, placed, serve_mks[i], bf)
                 new_completions.append(comp)
                 committed.append(p)
         else:
@@ -789,7 +874,9 @@ class OnlineScheduler:
             # epoch's *earlier* commits. The end-of-serve audit verifies
             # the invariant like everywhere else.
             fn = ONLINE_BASELINES[self.policy]
-            for p, view, bf in zip(plan.admit, plan.views, plan.is_backfill):
+            order = self._commit_order(t, st, plan, None)
+            for i in order:
+                p, view, bf = plan.admit[i], plan.views[i], plan.is_backfill[i]
                 t0 = _time.perf_counter()
                 placed = fn(
                     view.inst,
@@ -813,6 +900,106 @@ class OnlineScheduler:
         for p in committed:
             st.pending.remove(p)
         return new_completions
+
+    def _commit_order(
+        self,
+        t: float,
+        st: _ServeState,
+        plan: _EpochPlan,
+        scheds: list[Schedule] | None,
+    ) -> Sequence[int]:
+        """Choose the epoch's cross-job commit order (batch positions,
+        first-to-commit first).
+
+        ``arbitration="fifo"`` — and any single-job batch — returns the
+        identity immediately: no replay, no RNG, no float work, so the
+        default service is bit-identical to the pre-coflow commit loop.
+        ``"sigma"`` commits the bottleneck-first coflow order
+        unconditionally (replaying FIFO and sigma once each only to feed
+        the ``arbitration_gain`` counter). ``"search"`` minimizes the
+        replayed objective — ``(backfills rejected, total batch JCT)``,
+        lexicographic — over permutations: exhaustively for small
+        batches, portfolio neighborhood search seeded with sigma
+        otherwise; FIFO is always evaluated first, so the committed
+        order's replayed objective is never worse than FIFO's.
+
+        ``scheds`` carries the fleet policy's already-served schedules
+        (exact per-resource coflow demands); baselines pass ``None`` and
+        are replayed through their lazy per-commit solver with a
+        wired-volume proxy coflow for the sigma seed.
+        """
+        n = len(plan.admit)
+        if self.arbitration == "fifo" or n <= 1:
+            return range(n)
+        solver = None
+        if scheds is None:
+            fn = ONLINE_BASELINES[self.policy]
+
+            def solver(view, busy):
+                return fn(
+                    view.inst,
+                    use_wireless=view.inst.n_wireless > 0,
+                    channel_busy=busy,
+                )
+
+        arrivals = [p.event.time for p in plan.admit]
+
+        def evaluate(order):
+            return replay_commit_order(
+                st.cluster,
+                t,
+                plan.views,
+                order,
+                scheds=scheds,
+                solver=solver,
+                arrivals=arrivals,
+                is_backfill=plan.is_backfill,
+                hol_need=plan.hol_need,
+            ).objective
+
+        if scheds is not None:
+            coflows = [
+                coflow_from_schedule(v, s, index=i, job_id=p.event.job_id)
+                for i, (p, v, s) in enumerate(
+                    zip(plan.admit, plan.views, scheds)
+                )
+            ]
+        else:
+            coflows = [
+                coflow_from_instance(p.event.inst, index=i, job_id=p.event.job_id)
+                for i, p in enumerate(plan.admit)
+            ]
+        fifo = tuple(range(n))
+        sigma = tuple(sigma_order(coflows))
+        if self.arbitration == "sigma":
+            fifo_obj = evaluate(fifo)
+            chosen, chosen_obj = sigma, fifo_obj
+            st.counters["order_evals"] += 1
+            if sigma != fifo:
+                chosen_obj = evaluate(sigma)
+                st.counters["order_evals"] += 1
+        else:
+            rng = np.random.default_rng(
+                self.seed + 6151 * st.counters["epochs"]
+            )
+            res = search_commit_order(
+                evaluate,
+                n,
+                rng=rng,
+                seeds=(sigma,),
+                rounds=self.arbitration_rounds,
+                pool_size=self.arbitration_pool,
+            )
+            chosen, chosen_obj, fifo_obj = (
+                res.order, res.objective, res.fifo_objective
+            )
+            st.counters["order_evals"] += res.n_evals
+        if chosen != fifo:
+            st.counters["epochs_reordered"] += 1
+        # Replayed total-JCT delta vs FIFO for this epoch (positive =
+        # improvement; sigma commits its order even when negative).
+        st.counters["arbitration_gain"] += fifo_obj[1] - chosen_obj[1]
+        return chosen
 
     @staticmethod
     def _record(

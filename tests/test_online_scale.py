@@ -327,6 +327,56 @@ def test_streaming_series_p2_tracks_true_quantiles_at_scale():
         assert s.quantile(p) == pytest.approx(true, rel=0.05)
 
 
+def test_streaming_series_p2_switch_boundary_stays_in_range():
+    """The exact->sketch handoff at ``exact_max`` samples: right after
+    the switch the P-squared markers have seen almost no post-seed data
+    and the parabolic adjustment can wander — every tracked percentile
+    must still land inside the observed [min, max] at every stream
+    length through the transition, finite, and close to exact for the
+    median."""
+    rng = np.random.default_rng(7)
+    xs = list(rng.gamma(2.0, 50.0, size=80))
+    s = StreamingSeries()
+    for n, x in enumerate(xs, start=1):
+        s.push(x)
+        if n < 60:
+            continue
+        lo, hi = min(xs[:n]), max(xs[:n])
+        for p in (0.5, 0.9, 0.95, 0.99):
+            v = s.quantile(p)
+            assert np.isfinite(v)
+            assert lo <= v <= hi, (n, p, v, lo, hi)
+    # One sample past the switch the high quantiles clamp to the
+    # observed range rather than extrapolating beyond it.
+    assert s.count == 80
+    assert s.quantile(0.5) == pytest.approx(
+        float(np.percentile(xs, 50)), rel=0.25
+    )
+
+
+def test_streaming_series_sketch_handles_nonfinite_samples():
+    """Non-finite observations can poison the P-squared marker heights
+    into NaN; the accessor must fall back to the nearest observed
+    extreme instead of returning NaN."""
+    s = StreamingSeries()
+    for x in range(65):
+        s.push(float(x))
+    s.push(float("nan"))
+    for _ in range(10):
+        s.push(1.0)
+    for p in (0.5, 0.99):
+        v = s.quantile(p)
+        assert not np.isnan(v)
+
+
+def test_streaming_series_constant_stream_through_switch_is_exact():
+    s = StreamingSeries()
+    for _ in range(70):
+        s.push(3.5)
+    for p in (0.5, 0.9, 0.95, 0.99):
+        assert s.quantile(p) == 3.5
+
+
 def test_streaming_series_empty_and_untracked():
     s = StreamingSeries()
     assert s.quantile(0.5) == 0.0 and s.mean == 0.0

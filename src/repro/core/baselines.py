@@ -46,6 +46,7 @@ __all__ = [
     "g_list_schedule",
     "g_list_master_schedule",
     "fifo_solo_schedule",
+    "edf_solo_schedule",
     "greedy_list_online_schedule",
     "wired_only",
     "BASELINES",
@@ -312,6 +313,27 @@ def fifo_solo_schedule(
     )
 
 
+def edf_solo_schedule(
+    inst: ProblemInstance,
+    use_wireless: bool = True,
+    channel_busy: dict | None = None,
+) -> Schedule:
+    """Per-job scheduler of the online *EDF-solo* baseline.
+
+    The deadline-aware twin of :func:`fifo_solo_schedule`: identical
+    per-job placement (critical-path list scheduling on the idle
+    cluster), but the service orders its solo queue earliest-deadline
+    first instead of by arrival (``OnlineScheduler(policy="edf_solo")``
+    implies ``admission="edf"``). Keeping the placement bit-identical to
+    FIFO-solo makes the pair an apples-to-apples measurement of the
+    *admission order* alone — any deadline-miss delta between them is
+    attributable to EDF, not to solver quality.
+    """
+    return list_schedule(
+        inst, use_wireless=use_wireless, channel_busy=channel_busy
+    )
+
+
 def greedy_list_online_schedule(
     inst: ProblemInstance,
     use_wireless: bool = True,
@@ -335,5 +357,6 @@ def greedy_list_online_schedule(
 
 ONLINE_BASELINES = {
     "fifo_solo": fifo_solo_schedule,
+    "edf_solo": edf_solo_schedule,
     "greedy_list": greedy_list_online_schedule,
 }

@@ -10,13 +10,18 @@ cluster timeline, and the committed timeline is audited overlap-free.
 Layers:
 
   workload  — seeded Poisson / production-mix / trace arrival generators
+              + SLO-tier/tenant annotation layer (deadlines from the
+              rigorous critical-path bound)
   cluster   — global cluster timeline, residual-capacity instances,
               cross-job channel arbitration + commit-order replay +
               feasibility audit
   service   — admission event loop (FIFO / backfilling / free overtaking)
+              + SLO admission (fifo / edf / wfair queue ordering,
+              reject-or-defer admission control, bounded starvation)
               + warm-started re-optimization + coflow-aware commit-order
               arbitration (fifo / sigma / search)
   metrics   — per-job queueing/JCT records and aggregate OnlineResult
+              (per-tier SLO attainment, per-tenant queueing percentiles)
 """
 
 from repro.online.cluster import (
@@ -30,16 +35,23 @@ from repro.online.metrics import JobMetrics, OnlineResult, StreamingSeries
 from repro.online.service import DEFAULT_SOLVER_KWARGS, OnlineScheduler
 from repro.online.workload import (
     ArrivalEvent,
+    DEFAULT_SLO_TIERS,
+    SloTier,
     poisson_arrivals,
     production_arrivals,
     stream_poisson_arrivals,
     stream_production_arrivals,
+    stream_tiered_arrivals,
+    tiered_poisson_arrivals,
+    tiered_production_arrivals,
     trace_arrivals,
 )
 
 __all__ = [
     "ArrivalEvent",
     "ClusterTimeline",
+    "DEFAULT_SLO_TIERS",
+    "SloTier",
     "DEFAULT_SOLVER_KWARGS",
     "JobMetrics",
     "OnlineResult",
@@ -53,5 +65,8 @@ __all__ = [
     "production_arrivals",
     "stream_poisson_arrivals",
     "stream_production_arrivals",
+    "stream_tiered_arrivals",
+    "tiered_poisson_arrivals",
+    "tiered_production_arrivals",
     "trace_arrivals",
 ]

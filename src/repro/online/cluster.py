@@ -616,7 +616,11 @@ class OrderReplay:
     rejected that candidate (it would stay queued). ``objective`` is the
     lexicographic figure the order search minimizes: reject as few
     backfill candidates as possible, then minimize the batch's total
-    arrival-to-completion time.
+    arrival-to-completion time. ``n_deadline_missed`` counts trial
+    commits whose completion overran the job's deadline (positions with
+    ``deadlines[pos] is None`` and rejected positions never count); the
+    admission oracle in ``tests/test_admission.py`` compares candidate
+    admission orders on it.
     """
 
     order: tuple[int, ...]
@@ -624,6 +628,7 @@ class OrderReplay:
     completions: list
     n_rejected: int
     total_jct: float
+    n_deadline_missed: int = 0
 
     @property
     def objective(self) -> tuple[int, float]:
@@ -641,6 +646,7 @@ def replay_commit_order(
     arrivals: list[float] | None = None,
     is_backfill: list[bool] | None = None,
     hol_need: tuple[int, int] | None = None,
+    deadlines: "list[float | None] | None" = None,
 ) -> OrderReplay:
     """Trial-run one commit permutation of an epoch batch, mutating nothing.
 
@@ -655,7 +661,8 @@ def replay_commit_order(
     ``solver`` (``solver(view, busy) -> Schedule``, lazy baselines whose
     placement depends on the busy intervals seen) must be given.
     ``arrivals`` (defaults to ``t``) weight each job's completion into
-    ``total_jct``.
+    ``total_jct``; ``deadlines`` (per batch position, ``None`` entries =
+    best-effort) feeds :attr:`OrderReplay.n_deadline_missed`.
     """
     n = len(views)
     if (scheds is None) == (solver is None):
@@ -669,9 +676,13 @@ def replay_commit_order(
     rack_hold = cluster.rack_hold.copy() if need_holds else None
     wireless_hold = cluster.wireless_hold.copy() if need_holds else None
     wired_extra: list[tuple[float, float]] = []
+    ddl = [None] * n if deadlines is None else list(deadlines)
+    if len(ddl) != n:
+        raise ValueError("deadlines must match views in length")
     placed_out: list = [None] * n
     completions: list = [None] * n
     n_rejected = 0
+    n_deadline_missed = 0
     total_jct = 0.0
     for pos in order:
         view = views[pos]
@@ -695,6 +706,8 @@ def replay_commit_order(
         placed_out[pos] = placed
         completions[pos] = comp
         total_jct += comp - arr[pos]
+        if ddl[pos] is not None and comp > ddl[pos]:
+            n_deadline_missed += 1
         wired_extra.extend(wired_windows(view, placed, t))
         if need_holds:
             r_holds, w_holds = job_holds(view, placed, t)
@@ -704,4 +717,6 @@ def replay_commit_order(
             for phys, h in w_holds.items():
                 if h > wireless_hold[phys]:
                     wireless_hold[phys] = h
-    return OrderReplay(order, placed_out, completions, n_rejected, total_jct)
+    return OrderReplay(
+        order, placed_out, completions, n_rejected, total_jct, n_deadline_missed
+    )

@@ -237,6 +237,13 @@ class JobMetrics:
       assignment: int64[n_tasks] committed task->rack assignment in
         *physical* rack ids (the residual view's local labels mapped
         through its rack grant).
+      deadline / tenant / tier: SLO metadata copied from the
+        :class:`~repro.online.workload.ArrivalEvent` (``None`` for
+        untiered streams).
+      n_overtaken: admissions of *later-arriving* jobs that jumped ahead
+        of this job while it queued (non-FIFO admission orders and
+        backfilling both count); bounded by the service's
+        ``max_overtakes`` knob when set.
     """
 
     job_id: int
@@ -253,6 +260,10 @@ class JobMetrics:
     assignment: np.ndarray = dataclasses.field(
         default_factory=lambda: np.zeros(0, dtype=np.int64)
     )
+    deadline: float | None = None
+    tenant: str | None = None
+    tier: str | None = None
+    n_overtaken: int = 0
 
     @property
     def queueing_delay(self) -> float:
@@ -263,6 +274,11 @@ class JobMetrics:
     def jct(self) -> float:
         """Arrival-to-completion time (``completion - arrival``)."""
         return self.completion - self.arrival
+
+    @property
+    def deadline_missed(self) -> bool:
+        """True when the job had a deadline and completed after it."""
+        return self.deadline is not None and self.completion > self.deadline
 
 
 @dataclasses.dataclass
@@ -318,6 +334,27 @@ class OnlineResult:
         committed order vs FIFO (positive = the reordering improved the
         batch; sigma commits its order unconditionally, so its gain can
         go negative).
+      admission: queue-ordering policy the service ran (``"fifo"`` /
+        ``"edf"`` / ``"wfair"``).
+      n_deadline_jobs: served jobs that carried a deadline.
+      n_deadline_missed: served deadline jobs that completed after it.
+      n_deadline_deferrals: commits postponed by ``admission_control=
+        "defer"`` because the replayed trial proved the post-arbitration
+        completion would overrun the deadline (each deferral left the job
+        queued for a later epoch).
+      n_deadline_rejected: jobs dropped by ``admission_control="reject"``
+        on the rigorous lower-bound proof ``now + lower_bound(inst) >
+        deadline`` (never served; ids in ``rejected_job_ids``, no
+        :class:`JobMetrics` row, excluded from JCT aggregates).
+      rejected_job_ids: stream ids of the rejected jobs, in rejection
+        order.
+      tier_slo: per-tier ``(n_met, n_deadline_jobs)`` pairs over served
+        deadline-carrying jobs (see :attr:`slo_attainment`).
+      tenant_queue_stats: per-tenant :class:`StreamingSeries` of queueing
+        delays (feeds :attr:`tenant_p99_queueing_delay`).
+      max_overtakes_observed: largest per-job overtake count; when the
+        service ran with a ``max_overtakes`` bound this is asserted
+        ``<= max_overtakes`` before ``serve`` returns.
     """
 
     jobs: list[JobMetrics]
@@ -346,6 +383,41 @@ class OnlineResult:
     n_order_evals: int = 0
     n_epochs_reordered: int = 0
     arbitration_gain: float = 0.0
+    admission: str = "fifo"
+    n_deadline_jobs: int = 0
+    n_deadline_missed: int = 0
+    n_deadline_deferrals: int = 0
+    n_deadline_rejected: int = 0
+    rejected_job_ids: list[int] = dataclasses.field(default_factory=list)
+    tier_slo: "dict[str, tuple[int, int]]" = dataclasses.field(
+        default_factory=dict
+    )
+    tenant_queue_stats: "dict[str, StreamingSeries]" = dataclasses.field(
+        default_factory=dict
+    )
+    max_overtakes_observed: int = 0
+
+    @property
+    def slo_attainment(self) -> "dict[str, float]":
+        """Per-tier fraction of deadline-carrying jobs that met their SLO.
+
+        Tiers with no deadline-carrying served jobs (e.g. best-effort
+        tiers) are omitted rather than reported as 0 or 1.
+        """
+        return {
+            tier: met / total
+            for tier, (met, total) in sorted(self.tier_slo.items())
+            if total
+        }
+
+    @property
+    def tenant_p99_queueing_delay(self) -> "dict[str, float]":
+        """Per-tenant p99 queueing delay (from the streaming sketches)."""
+        return {
+            tenant: s.p99
+            for tenant, s in sorted(self.tenant_queue_stats.items())
+            if s.count
+        }
 
     @property
     def jcts(self) -> np.ndarray:
@@ -437,6 +509,36 @@ class OnlineResult:
             if self.arbitration != "fifo"
             else ""
         )
+        adm = ""
+        if (
+            self.admission != "fifo"
+            or self.n_deadline_jobs
+            or self.n_deadline_rejected
+        ):
+            adm = (
+                f"adm={self.admission} "
+                f"misses={self.n_deadline_missed}/{self.n_deadline_jobs} "
+            )
+            slo = self.slo_attainment
+            if slo:
+                adm += (
+                    "slo("
+                    + ",".join(f"{t}={v:.2f}" for t, v in slo.items())
+                    + ") "
+                )
+            if self.n_deadline_deferrals:
+                adm += f"deferrals={self.n_deadline_deferrals} "
+            if self.n_deadline_rejected:
+                adm += f"rejected={self.n_deadline_rejected} "
+            if self.max_overtakes_observed:
+                adm += f"max_overtaken={self.max_overtakes_observed} "
+            p99q = self.tenant_p99_queueing_delay
+            if p99q:
+                adm += (
+                    "tenant_p99q("
+                    + ",".join(f"{t}={v:.1f}" for t, v in p99q.items())
+                    + ") "
+                )
         return (
             f"policy={self.policy} warm={self.warm_start} jobs={self.n_jobs} "
             f"mean_jct={self.mean_jct:.1f} p95_jct={self.p95_jct:.1f} "
@@ -452,6 +554,7 @@ class OnlineResult:
             f"{self.wireless_utilization:.2f} "
             f"epochs={self.n_epochs} solves={self.n_solves} "
             f"{arb}"
+            f"{adm}"
             f"backfilled={self.n_backfilled} "
             f"pruned={self.n_pruned}/{self.n_candidates} "
             f"jobs_per_solver_s={jps_s} solver_wall={self.solver_wall:.2f}s"

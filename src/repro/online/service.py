@@ -94,6 +94,7 @@ from typing import Iterable, Iterator, Sequence
 import numpy as np
 
 from repro.core.baselines import ONLINE_BASELINES
+from repro.core.bounds import lower_bound
 from repro.core.coflow import (
     coflow_from_instance,
     coflow_from_schedule,
@@ -158,6 +159,14 @@ class _PendingJob:
     # Free-capacity fingerprint at the job's last planning solve; the
     # bounded re-plan mode skips re-solving while it is unchanged.
     view_sig: tuple | None = None
+    # SLO admission state: how many later-arriving jobs were admitted
+    # ahead of this one (bounded by ``max_overtakes`` when set), the
+    # cached rigorous lower bound backing the rejection proof, and the
+    # defer-mode flag that stops protecting a provably unmeetable
+    # deadline (the job then serves ASAP and the miss is counted).
+    n_overtaken: int = 0
+    lb: float | None = None
+    hopeless: bool = False
 
     def tables(self) -> OpTables:
         if self.op_tables is None:
@@ -304,6 +313,9 @@ class _ServeState:
             "backfilled": 0, "backfill_rejected": 0,
             "order_evals": 0, "epochs_reordered": 0,
             "arbitration_gain": 0.0,
+            "deadline_jobs": 0, "deadline_missed": 0,
+            "deadline_deferrals": 0, "deadline_rejected": 0,
+            "max_overtaken": 0,
         }
     )
     peak_active: int = 0
@@ -311,6 +323,14 @@ class _ServeState:
     n_served: int = 0
     epoch_latency: list[float] | None = None
     avail_sig: tuple | None = None
+    stream_exhausted: bool = False
+    # Per-tier (met, total) SLO tallies, per-tenant queueing-delay
+    # sketches and attained service (the wfair ordering key), and the
+    # stream ids dropped by admission_control="reject".
+    tier_slo: dict = dataclasses.field(default_factory=dict)
+    tenant_queue: dict = dataclasses.field(default_factory=dict)
+    tenant_service: dict = dataclasses.field(default_factory=dict)
+    rejected_ids: list = dataclasses.field(default_factory=list)
 
 
 class OnlineScheduler:
@@ -352,7 +372,11 @@ class OnlineScheduler:
         holds — so every resource the overtaker touches is released by
         then and the head-of-line admission epoch is provably never
         delayed. Requires ``preserve_order=True`` (without it every
-        fitting job may overtake anyway). Ignored by ``fifo_solo``.
+        fitting job may overtake anyway). Ignored by the solo baselines
+        (``fifo_solo`` / ``edf_solo``). Under a non-FIFO ``admission``
+        order, "head-of-line" means the head of the *admission-ordered*
+        queue (e.g. the earliest-deadline job under ``"edf"``) — the
+        same blocking and backfill proofs apply to that order.
       seed: master seed for the per-solve engine seeds (see module
         docstring for the exact derivation).
       seed_pool_size: incumbents remembered per queued job.
@@ -408,6 +432,53 @@ class OnlineScheduler:
         pass as the wired channel (the end-of-serve audit covers it).
         Trades earlier admission for possible channel queueing on the
         shared subchannel.
+      admission: queue-ordering policy for admission selection.
+        ``"fifo"`` (default) considers the queue strictly in arrival
+        order — bit-identical to the pre-SLO service on every stream (no
+        sort, no extra RNG or float work). ``"edf"`` orders by earliest
+        deadline first (deadline-less jobs last, arrival-order
+        tie-break) — EDF *within feasibility*: the ordering only ranks
+        the queue, every admission still passes the same capacity /
+        head-of-line / backfill machinery. ``"wfair"`` orders by weighted
+        attained service: each tenant accumulates the makespan of its
+        committed jobs, and the queue is ranked by
+        ``attained_service[tenant] / weight`` ascending (see
+        ``tenant_weights``), so light / high-share tenants are served
+        first and cross-tenant fairness is enforced continuously.
+      admission_control: what to do about jobs whose deadline cannot be
+        met. ``"none"`` (default) serves everything and just counts
+        misses. ``"reject"`` drops a queued job the moment the rigorous
+        proof ``now + lower_bound(inst) > deadline`` holds — the bound
+        is the resource-independent critical path
+        (:func:`repro.core.bounds.lower_bound`), and epochs only move
+        forward, so a job rejected now could never meet its deadline in
+        any future epoch either; rejected ids land on
+        ``OnlineResult.rejected_job_ids`` (no ``JobMetrics`` row, JCT
+        aggregates unpolluted). ``"defer"`` never drops: a job whose
+        *post-arbitration* completion would overrun its deadline — the
+        same mutation-free trial arbitration
+        :func:`repro.online.cluster.replay_commit_order` replays, so the
+        proof is exact, and ``replay_commit_order(...,
+        deadlines=...)`` predicts every defer bit-for-bit — stays queued
+        for a later (possibly less contended) epoch instead of
+        committing a guaranteed miss. Deferral is bounded: once the
+        deadline passes (or the lower-bound proof shows it must), the
+        job serves ASAP and the miss is counted, and a job never defers
+        without a future wakeup to retry on (no livelock — the deadlock
+        guard stays unreachable).
+      max_overtakes: starvation bound — a queued job may see at most
+        this many later-arriving jobs admitted ahead of it (via non-FIFO
+        admission orders or backfilling). Saturated jobs are hoisted to
+        the head of the admission queue, and any admission that would
+        overtake a saturated job is withheld that epoch. Overtakes are
+        counted per job (``JobMetrics.n_overtaken``) and the bound is
+        asserted at every commit — exceeding it raises, it is an
+        invariant, not advice. ``None`` (default) counts overtakes under
+        non-FIFO admission but does not bound them.
+      tenant_weights: ``wfair`` share per tenant tag (falls back to the
+        job's *tier* tag, then 1.0) — a tenant with weight 2 is entitled
+        to twice the attained service of a weight-1 tenant before
+        ranking behind it. Unknown tags default to 1.0.
     """
 
     def __init__(
@@ -433,6 +504,10 @@ class OnlineScheduler:
         arbitration_rounds: int = 2,
         arbitration_pool: int = 8,
         wireless_grants: str = "hold",
+        admission: str = "fifo",
+        admission_control: str = "none",
+        max_overtakes: int | None = None,
+        tenant_weights: dict | None = None,
     ):
         if policy != "fleet" and policy not in ONLINE_BASELINES:
             raise ValueError(
@@ -461,6 +536,23 @@ class OnlineScheduler:
             raise ValueError("arbitration_pool must be positive")
         if wireless_grants not in ("hold", "interval"):
             raise ValueError("wireless_grants must be 'hold' or 'interval'")
+        if admission not in ("fifo", "edf", "wfair"):
+            raise ValueError("admission must be 'fifo', 'edf' or 'wfair'")
+        if admission_control not in ("none", "defer", "reject"):
+            raise ValueError(
+                "admission_control must be 'none', 'defer' or 'reject'"
+            )
+        if max_overtakes is not None and max_overtakes < 0:
+            raise ValueError("max_overtakes must be non-negative (or None)")
+        if tenant_weights is not None and any(
+            w <= 0 for w in tenant_weights.values()
+        ):
+            raise ValueError("tenant_weights must be positive")
+        # The deadline-aware solo baseline is fifo_solo's placement under
+        # EDF queue ordering; selecting it implies the ordering unless the
+        # caller explicitly asked for another one.
+        if policy == "edf_solo" and admission == "fifo":
+            admission = "edf"
         self.n_racks = int(n_racks)
         self.n_wireless = int(n_wireless)
         self.window = float(window)
@@ -483,6 +575,15 @@ class OnlineScheduler:
         self.arbitration_rounds = int(arbitration_rounds)
         self.arbitration_pool = int(arbitration_pool)
         self.wireless_grants = wireless_grants
+        self.admission = admission
+        self.admission_control = admission_control
+        self.max_overtakes = None if max_overtakes is None else int(max_overtakes)
+        self.tenant_weights = dict(tenant_weights) if tenant_weights else {}
+        # Overtake bookkeeping runs only when overtakes are possible and
+        # observable — the default FIFO/unbounded path skips it entirely.
+        self._track_overtakes = (
+            self.admission != "fifo" or self.max_overtakes is not None
+        )
 
     # -- public API ----------------------------------------------------------
 
@@ -525,6 +626,8 @@ class OnlineScheduler:
                     "outstanding completion or arrival to wake on"
                 )
             self._collect_arrivals(stream, st, t)
+            if self.admission_control != "none":
+                self._deadline_control(t, st)
             st.counters["epochs"] += 1
             plan = self._plan_batch(t, st)
             t0 = _time.perf_counter() if st.epoch_latency is not None else 0.0
@@ -571,6 +674,15 @@ class OnlineScheduler:
             n_order_evals=st.counters["order_evals"],
             n_epochs_reordered=st.counters["epochs_reordered"],
             arbitration_gain=st.counters["arbitration_gain"],
+            admission=self.admission,
+            n_deadline_jobs=st.counters["deadline_jobs"],
+            n_deadline_missed=st.counters["deadline_missed"],
+            n_deadline_deferrals=st.counters["deadline_deferrals"],
+            n_deadline_rejected=st.counters["deadline_rejected"],
+            rejected_job_ids=st.rejected_ids,
+            tier_slo=st.tier_slo,
+            tenant_queue_stats=st.tenant_queue,
+            max_overtakes_observed=st.counters["max_overtaken"],
         )
 
     # -- stage 1: collect ----------------------------------------------------
@@ -587,8 +699,39 @@ class OnlineScheduler:
             heapq.heappop(st.completions)
         st.free_r.advance(t, st.cluster.rack_hold)
         st.free_w.advance(t, st.cluster.wireless_hold)
+        st.stream_exhausted = stream.exhausted
         if self.replan == "changed":
             st.avail_sig = (tuple(st.free_r.ids), tuple(st.free_w.ids))
+
+    def _deadline_control(self, t: float, st: _ServeState) -> None:
+        """Resolve provably unmeetable deadlines at epoch ``t``.
+
+        The proof is the rigorous resource-independent critical-path
+        bound: no scheduler on any cluster can finish ``inst`` in under
+        ``lower_bound(inst)`` time, so ``t + lower_bound(inst) >
+        deadline`` is a certificate the deadline is lost — and since the
+        event loop only moves forward, lost forever. Under
+        ``admission_control="reject"`` the job is dropped from the queue
+        (counted, id recorded); under ``"defer"`` it is marked hopeless
+        so the commit stage stops deferring it (it serves ASAP and the
+        miss is counted). The bound is computed once per job and cached.
+        """
+        doomed: list[_PendingJob] = []
+        for p in st.pending:
+            ddl = p.event.deadline
+            if ddl is None or p.hopeless:
+                continue
+            if p.lb is None:
+                p.lb = lower_bound(p.event.inst)
+            if t + p.lb > ddl:
+                if self.admission_control == "reject":
+                    doomed.append(p)
+                else:
+                    p.hopeless = True
+        for p in doomed:
+            st.pending.remove(p)
+            st.counters["deadline_rejected"] += 1
+            st.rejected_ids.append(p.event.job_id)
 
     # -- stage 2: plan -------------------------------------------------------
 
@@ -606,18 +749,56 @@ class OnlineScheduler:
             need_w = min(inst.n_wireless, self.n_wireless)
         return need_r, need_w
 
+    def _admission_queue(self, st: _ServeState) -> list[_PendingJob]:
+        """The queue in admission order.
+
+        ``admission="fifo"`` returns the pending list itself — no copy,
+        no sort, no float work, so the default path is bit-identical to
+        the pre-SLO loop. ``"edf"`` stable-sorts by
+        ``(deadline, arrival)`` with deadline-less jobs last; ``"wfair"``
+        by weighted attained tenant service (ties by arrival). When a
+        ``max_overtakes`` bound is set, saturated jobs (overtaken the
+        full allowance) are hoisted to the head in arrival order — they
+        must be next, and the selection loop below refuses any admission
+        that would overtake them again.
+        """
+        if self.admission == "fifo":
+            return st.pending
+        if self.admission == "edf":
+            def key(p: _PendingJob):
+                d = p.event.deadline
+                return (d if d is not None else np.inf, p.event.job_id)
+        else:  # wfair
+            def key(p: _PendingJob):
+                ev = p.event
+                w = self.tenant_weights.get(
+                    ev.tenant, self.tenant_weights.get(ev.tier, 1.0)
+                )
+                return (
+                    st.tenant_service.get(ev.tenant, 0.0) / w,
+                    ev.job_id,
+                )
+        bound = self.max_overtakes
+        if bound is not None:
+            head = [p for p in st.pending if p.n_overtaken >= bound]
+            if head:  # pending is arrival-ordered, so head is too
+                tail = [p for p in st.pending if p.n_overtaken < bound]
+                return head + sorted(tail, key=key)
+        return sorted(st.pending, key=key)
+
     def _select_admissions(self, t: float, st: _ServeState) -> _EpochPlan:
         """Admission selection: draw disjoint residual views from shrinking
         pools; order-preserving modes flag overtake candidates."""
         cluster = st.cluster
         hol_need = None  # head-of-line protection bound for backfills
-        if self.policy == "fifo_solo":
-            # Solo rule: head-of-line job only, and only on a fully idle
+        queue = self._admission_queue(st)
+        if self.policy in ("fifo_solo", "edf_solo"):
+            # Solo rule: head-of-queue job only, and only on a fully idle
             # cluster (every rack free implies every channel free too —
             # channel holds never outlast the rack hold of the consumer).
             if len(st.free_r) < self.n_racks:
                 return _EpochPlan([], [], [], None, None)
-            admit = st.pending[:1]
+            admit = queue[:1]
             views = [cluster.residual_view(admit[0].event.inst, t)]
             return _EpochPlan(admit, views, [False], None, None)
         # Racks AND wireless subchannels granted within one epoch are
@@ -644,7 +825,19 @@ class OnlineScheduler:
                 pool_w = np.concatenate([pool_w, held])
         admit, views, is_backfill = [], [], []
         blocked = False  # head-of-line blocked (order-preserving modes)
-        for p in st.pending:
+        # Starvation-bound bookkeeping (only under _track_overtakes):
+        # ``prospective`` counts, per still-queued job, the overtakes
+        # *this epoch's* selections would add if every admission commits;
+        # ``firm`` holds ids of admissions that are certain to commit
+        # (not backfill candidates, not defer-eligible), whose co-epoch
+        # admission is simultaneous — not an overtake. The check below is
+        # conservative: a commit-stage rejection can only return counted
+        # prospective overtakes, never add uncounted ones, so the
+        # commit-time assertion holds by construction.
+        bound = self.max_overtakes
+        prospective: dict[int, int] = {}
+        firm: set[int] = set()
+        for p in queue:
             inst = p.event.inst
             ok = pool.size >= self.min_free_racks
             if ok and self.require_full_demand:
@@ -657,6 +850,20 @@ class OnlineScheduler:
             overtakes = self.preserve_order and blocked
             if overtakes and not self.backfill:
                 ok = False  # head-of-line blocking: no overtaking
+            if ok and bound is not None:
+                # Withhold any admission that would push an earlier-
+                # arrived, still-queued job past its overtake allowance.
+                jid = p.event.job_id
+                for q in st.pending:
+                    if (
+                        q is not p
+                        and q.event.job_id < jid
+                        and id(q) not in firm
+                        and q.n_overtaken + prospective.get(id(q), 0)
+                        >= bound
+                    ):
+                        ok = False
+                        break
             if ok:
                 view = cluster.residual_view(
                     inst, t, rack_pool=pool, wireless_pool=pool_w
@@ -671,6 +878,23 @@ class OnlineScheduler:
                 # it consumed from the pool stay unused this epoch —
                 # conservative and deterministic).
                 is_backfill.append(overtakes)
+                if bound is not None:
+                    jid = p.event.job_id
+                    for q in st.pending:
+                        if (
+                            q is not p
+                            and q.event.job_id < jid
+                            and id(q) not in firm
+                        ):
+                            prospective[id(q)] = (
+                                prospective.get(id(q), 0) + 1
+                            )
+                    if not overtakes and not (
+                        self.admission_control == "defer"
+                        and p.event.deadline is not None
+                        and not p.hopeless
+                    ):
+                        firm.add(id(p))
             elif self.preserve_order and not blocked:
                 blocked = True
                 hol_need = self._hol_need(inst)
@@ -808,11 +1032,93 @@ class OnlineScheduler:
         st.n_served += 1
         st.queue_stats.push(t - p.event.time)
         st.jct_stats.push(comp - p.event.time)
+        ev = p.event
+        if ev.deadline is not None:
+            st.counters["deadline_jobs"] += 1
+            met = comp <= ev.deadline
+            if not met:
+                st.counters["deadline_missed"] += 1
+            if ev.tier is not None:
+                m, tot = st.tier_slo.get(ev.tier, (0, 0))
+                st.tier_slo[ev.tier] = (m + int(met), tot + 1)
+        if ev.tenant is not None:
+            series = st.tenant_queue.get(ev.tenant)
+            if series is None:
+                series = st.tenant_queue[ev.tenant] = StreamingSeries()
+            series.push(t - ev.time)
+            st.tenant_service[ev.tenant] = (
+                st.tenant_service.get(ev.tenant, 0.0) + float(placed.makespan)
+            )
         if self.record_jobs:
             st.records.append(
                 self._record(p, view, t, comp, placed, solver_mk, backfilled)
             )
         return comp
+
+    def _should_defer(
+        self,
+        p: _PendingJob,
+        t: float,
+        comp: float,
+        st: _ServeState,
+        new_completions: list[float],
+    ) -> bool:
+        """Deadline-defer decision for one arbitrated commit candidate.
+
+        ``comp`` is the candidate's post-arbitration completion — the
+        output of the exact same trial arbitration
+        :func:`repro.online.cluster.replay_commit_order` runs per
+        position, so ``replay_commit_order(..., deadlines=...)`` over the
+        epoch's committed prefix predicts every defer decision
+        bit-for-bit (``tests/test_admission.py`` locks the parity).
+        Deferring requires a future wakeup (an outstanding completion,
+        one committed earlier this epoch, or more arrivals) so the event
+        loop can never deadlock on an all-deferred queue, and stops once
+        the deadline has passed or is provably lost (``hopeless``): the
+        job then serves ASAP and the miss is counted.
+        """
+        if self.admission_control != "defer" or p.hopeless:
+            return False
+        ddl = p.event.deadline
+        if ddl is None or comp <= ddl or t > ddl:
+            return False
+        return (
+            bool(st.completions)
+            or bool(new_completions)
+            or not st.stream_exhausted
+        )
+
+    def _count_overtakes(
+        self, st: _ServeState, committed: list[_PendingJob]
+    ) -> None:
+        """Charge this epoch's commits against the jobs still queued.
+
+        Every committed job with a larger stream id than a still-pending
+        job overtook it (job ids are arrival order — ties broken the
+        same way the stream is sorted). The ``max_overtakes`` bound is
+        asserted here, at the moment of counting: the selection-stage
+        barrier makes a violation unreachable, so tripping this raise
+        means the starvation bound was actually broken, not merely
+        approached.
+        """
+        for q in st.pending:
+            inc = sum(
+                1 for c in committed if c.event.job_id > q.event.job_id
+            )
+            if not inc:
+                continue
+            q.n_overtaken += inc
+            if q.n_overtaken > st.counters["max_overtaken"]:
+                st.counters["max_overtaken"] = q.n_overtaken
+            if (
+                self.max_overtakes is not None
+                and q.n_overtaken > self.max_overtakes
+            ):
+                raise RuntimeError(
+                    f"starvation bound violated: job {q.event.job_id} "
+                    f"overtaken {q.n_overtaken} times "
+                    f"(max_overtakes={self.max_overtakes})"
+                )
 
     def _arbitrate_and_commit(
         self, t: float, st: _ServeState, plan: _EpochPlan | None
@@ -858,6 +1164,14 @@ class OnlineScheduler:
                     # solve already fed the warm-start incumbents above.
                     st.counters["backfill_rejected"] += 1
                     continue
+                if self._should_defer(
+                    p, t, t + float(placed.makespan), st, new_completions
+                ):
+                    # The trial completion overruns the deadline: a
+                    # commit now is a proven miss, so the job stays
+                    # queued for a less contended epoch.
+                    st.counters["deadline_deferrals"] += 1
+                    continue
                 comp = self._commit_job(t, st, p, view, placed, serve_mks[i], bf)
                 new_completions.append(comp)
                 committed.append(p)
@@ -891,6 +1205,11 @@ class OnlineScheduler:
                 ):
                     st.counters["backfill_rejected"] += 1
                     continue
+                if self._should_defer(
+                    p, t, t + float(placed.makespan), st, new_completions
+                ):
+                    st.counters["deadline_deferrals"] += 1
+                    continue
                 comp = self._commit_job(
                     t, st, p, view, placed, placed.makespan, bf
                 )
@@ -899,6 +1218,8 @@ class OnlineScheduler:
 
         for p in committed:
             st.pending.remove(p)
+        if self._track_overtakes and committed and st.pending:
+            self._count_overtakes(st, committed)
         return new_completions
 
     def _commit_order(
@@ -1024,4 +1345,8 @@ class OnlineScheduler:
             solver_makespan=float(solver_mk),
             backfilled=bool(backfilled),
             assignment=view.rack_map[np.asarray(placed.rack, dtype=np.int64)],
+            deadline=p.event.deadline,
+            tenant=p.event.tenant,
+            tier=p.event.tier,
+            n_overtaken=p.n_overtaken,
         )

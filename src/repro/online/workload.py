@@ -25,6 +25,20 @@ order (O(1) memory per event), which is what lets the stress lane push
 list-returning functions above are thin ``list(...)`` wrappers over the
 streams and emit bit-identical events.
 
+SLO tiers and tenants
+---------------------
+:func:`stream_tiered_arrivals` decorates *any* arrival stream with
+multi-tenant SLO metadata: each job draws a tenant tag and an SLO tier
+(:class:`SloTier`) from a seeded mix, and tiers with finite slack get a
+deadline ``arrival + slack * lower_bound(inst)`` — the rigorous
+resource-independent critical-path bound from :mod:`repro.core.bounds`,
+so a slack of 1.0 is the tightest deadline any scheduler could ever
+meet. The tier draw uses its *own* RNG (derived from, but independent
+of, the base seed), so the underlying arrival times / DAGs / demands are
+bit-identical to the untiered stream — tiering is a pure annotation
+layer. :func:`tiered_poisson_arrivals` and
+:func:`tiered_production_arrivals` are the pre-composed list forms.
+
 Determinism contract: a generator called twice with the same seed and
 parameters returns bit-identical streams (same arrival times, same DAGs,
 same demands). Streams are sorted by arrival time, times are
@@ -46,14 +60,20 @@ from repro.core.dag import (
     make_random_workflow,
     make_simple_mapreduce,
 )
+from repro.core.bounds import lower_bound
 from repro.core.instance import ProblemInstance
 
 __all__ = [
     "ArrivalEvent",
+    "SloTier",
+    "DEFAULT_SLO_TIERS",
     "poisson_arrivals",
     "production_arrivals",
     "stream_poisson_arrivals",
     "stream_production_arrivals",
+    "stream_tiered_arrivals",
+    "tiered_poisson_arrivals",
+    "tiered_production_arrivals",
     "trace_arrivals",
     "PRODUCTION_FAMILY_WEIGHTS",
     "PRODUCTION_RHO_PALETTE",
@@ -71,12 +91,52 @@ class ArrivalEvent:
         grant less (a residual-capacity view) at admission time.
       job_id: position in the stream (0-based, unique per stream).
       family: workload family tag (for metrics breakdowns).
+      deadline: absolute completion deadline, or ``None`` (best-effort).
+      tenant: owning-tenant tag, or ``None`` (anonymous).
+      tier: SLO tier name, or ``None`` (untiered).
+
+    The three SLO fields default to ``None`` so pre-existing streams and
+    pickles are unchanged; :func:`stream_tiered_arrivals` fills them in.
     """
 
     time: float
     inst: ProblemInstance
     job_id: int
     family: str
+    deadline: float | None = None
+    tenant: str | None = None
+    tier: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SloTier:
+    """One SLO class in a tiered workload mix.
+
+    Attributes:
+      name: tier tag stamped on ``ArrivalEvent.tier``.
+      weight: sampling weight in the tier mix (normalized internally).
+      slack: deadline slack multiplier — a job's deadline is
+        ``arrival + slack * lower_bound(inst)`` where ``lower_bound`` is
+        the rigorous critical-path bound (so ``slack < 1`` is unmeetable
+        by construction). ``None`` means best-effort: no deadline.
+      share: weighted-fairness share used by ``admission="wfair"``
+        (larger = more service per unit of attained work).
+    """
+
+    name: str
+    weight: float
+    slack: float | None
+    share: float = 1.0
+
+
+# Default three-class mix: a small latency-critical gold class with tight
+# deadlines, a silver bulk class with loose deadlines, and a best-effort
+# bronze class with none. Shares follow the usual 4:2:1 weighted-fair split.
+DEFAULT_SLO_TIERS = (
+    SloTier("gold", weight=0.2, slack=2.0, share=4.0),
+    SloTier("silver", weight=0.5, slack=4.0, share=2.0),
+    SloTier("bronze", weight=0.3, slack=None, share=1.0),
+)
 
 
 def _sorted_events(events: list[ArrivalEvent]) -> list[ArrivalEvent]:
@@ -304,6 +364,112 @@ def stream_production_arrivals(
             yield ArrivalEvent(time=t, inst=inst, job_id=j, family=family)
 
     return _gen()
+
+
+def _validated_tiers(tiers: Sequence[SloTier]) -> tuple[SloTier, ...]:
+    tiers = tuple(tiers)
+    if not tiers:
+        raise ValueError("tiers must be non-empty")
+    if any(t.weight < 0 for t in tiers) or not any(t.weight > 0 for t in tiers):
+        raise ValueError("tier weights must be non-negative with positive sum")
+    if any(t.slack is not None and t.slack <= 0 for t in tiers):
+        raise ValueError("tier slack must be positive (or None for no deadline)")
+    if any(t.share <= 0 for t in tiers):
+        raise ValueError("tier share must be positive")
+    return tiers
+
+
+def stream_tiered_arrivals(
+    events: Iterable[ArrivalEvent],
+    seed: int,
+    *,
+    tiers: Sequence[SloTier] = DEFAULT_SLO_TIERS,
+    n_tenants: int = 3,
+) -> Iterator[ArrivalEvent]:
+    """Annotate an arrival stream with seeded tenant + SLO-tier metadata.
+
+    Each event draws a tenant uniformly from ``n_tenants`` and a tier from
+    the ``tiers`` mix (weighted by :attr:`SloTier.weight`) using an RNG
+    derived from ``(seed, "slo-tiers")`` — *not* the base stream's RNG —
+    so the wrapped events carry identical ``time`` / ``inst`` / ``job_id``
+    / ``family`` to the unwrapped stream. Tiers with finite slack stamp
+    ``deadline = time + slack * lower_bound(inst)``; ``slack=None`` tiers
+    leave ``deadline=None`` (best-effort).
+
+    Lazily yields :class:`ArrivalEvent` copies, preserving input order.
+    """
+    tiers = _validated_tiers(tiers)
+    if n_tenants < 1:
+        raise ValueError("n_tenants must be >= 1")
+
+    def _gen() -> Iterator[ArrivalEvent]:
+        # Independent seed sequence: spawning off (seed, tag) keeps the tier
+        # draws decoupled from the base stream's RNG consumption.
+        rng = np.random.default_rng([seed, int.from_bytes(b"slo", "big")])
+        p = np.asarray([t.weight for t in tiers], dtype=np.float64)
+        p = p / p.sum()
+        for ev in events:
+            tier = tiers[int(rng.choice(len(tiers), p=p))]
+            tenant = f"tenant-{int(rng.integers(n_tenants))}"
+            deadline = (
+                None
+                if tier.slack is None
+                else ev.time + tier.slack * lower_bound(ev.inst)
+            )
+            yield dataclasses.replace(
+                ev, deadline=deadline, tenant=tenant, tier=tier.name
+            )
+
+    return _gen()
+
+
+def tiered_poisson_arrivals(
+    seed: int,
+    rate: float,
+    n_jobs: int,
+    *,
+    tiers: Sequence[SloTier] = DEFAULT_SLO_TIERS,
+    n_tenants: int = 3,
+    **kwargs,
+) -> list[ArrivalEvent]:
+    """:func:`poisson_arrivals` with tenant/SLO annotations.
+
+    The base stream is bit-identical to ``poisson_arrivals(seed, ...)``
+    (same times, DAGs, demands); only the SLO fields differ from ``None``.
+    Extra ``kwargs`` pass through to the base generator.
+    """
+    return list(
+        stream_tiered_arrivals(
+            stream_poisson_arrivals(seed, rate, n_jobs, **kwargs),
+            seed,
+            tiers=tiers,
+            n_tenants=n_tenants,
+        )
+    )
+
+
+def tiered_production_arrivals(
+    seed: int,
+    rate: float,
+    n_jobs: int,
+    *,
+    tiers: Sequence[SloTier] = DEFAULT_SLO_TIERS,
+    n_tenants: int = 3,
+    **kwargs,
+) -> list[ArrivalEvent]:
+    """:func:`production_arrivals` with tenant/SLO annotations.
+
+    Same contract as :func:`tiered_poisson_arrivals`: the underlying
+    production stream is bit-identical to the untiered one.
+    """
+    return list(
+        stream_tiered_arrivals(
+            stream_production_arrivals(seed, rate, n_jobs, **kwargs),
+            seed,
+            tiers=tiers,
+            n_tenants=n_tenants,
+        )
+    )
 
 
 def trace_arrivals(

@@ -1,0 +1,822 @@
+"""Deadline/SLO-tiered multi-tenant admission, locked by an exhaustive-
+permutation oracle and a property layer.
+
+Five layers:
+
+  1. Bit-identity regression: the default (``admission="fifo"``) service
+     reproduces the PR-7 committed timelines and counters *exactly* —
+     hardcoded golden fingerprints, no tolerance — and stays bit-identical
+     when the unused SLO knobs are set or the stream is tier-annotated.
+  2. The oracle layer: epoch batches of <= 5 deadline-carrying jobs are
+     brute-forced through ``replay_commit_order(deadlines=...)`` (every
+     admission order trial-committed via the real arbitration path).
+     EDF's miss count sits inside the oracle envelope, is never worse
+     than FIFO on any oracle case, and *is* the oracle optimum on
+     slack-separated batches; the replay's miss prediction matches real
+     commits bit-for-bit for every permutation.
+  3. Service-level SLO semantics: EDF reduces misses end-to-end on a
+     contended batch, ``admission_control="reject"`` drops provably
+     unmeetable jobs on the rigorous lower-bound proof, ``"defer"``
+     postpones commits the replay proves late, ``wfair`` serves a light
+     tenant ahead of a heavy tenant's backlog, and ``max_overtakes``
+     bounds starvation (with ``max_overtakes=0`` degenerating to the
+     bit-exact FIFO stream).
+  4. Property layer: seeded tiered overload streams always serve to a
+     timeline that passes the full overlap audit, per-job overtake
+     counts respect the bound, and SLO counters reconcile with the
+     per-job records. Runs under Hypothesis when installed; falls back
+     to a fixed seeded sweep otherwise, as in ``test_coflow.py``.
+  5. Backfill interaction: the PR-5 head-of-line protections hold
+     unchanged under ``admission="edf"`` / ``"wfair"``, including the
+     shadow-slack rejection path.
+"""
+
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import ProblemInstance, g_list_schedule, random_job
+from repro.core.baselines import ONLINE_BASELINES, edf_solo_schedule
+from repro.core.bounds import lower_bound
+from repro.core.dag import make_onestage_mapreduce
+from repro.online import (
+    ClusterTimeline,
+    DEFAULT_SLO_TIERS,
+    JobMetrics,
+    OnlineResult,
+    OnlineScheduler,
+    SloTier,
+    StreamingSeries,
+    poisson_arrivals,
+    production_arrivals,
+    replay_commit_order,
+    stream_tiered_arrivals,
+    tiered_poisson_arrivals,
+    tiered_production_arrivals,
+    trace_arrivals,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _mr_inst(seed, rho, n_racks=2, n_wireless=0):
+    job = make_onestage_mapreduce(
+        np.random.default_rng(seed), n_map=3, n_reduce=2, rho=rho
+    )
+    return ProblemInstance(job=job, n_racks=n_racks, n_wireless=n_wireless)
+
+
+def _greedy_solver(view, busy):
+    return g_list_schedule(
+        view.inst, use_wireless=view.inst.n_wireless > 0, channel_busy=busy
+    )
+
+
+def _epoch_views(cl, insts, t=0.0):
+    pool = cl.free_racks(t)
+    views = []
+    for inst in insts:
+        v = cl.residual_view(inst, t, rack_pool=pool)
+        assert v is not None and v.full
+        pool = pool[inst.n_racks:]
+        views.append(v)
+    return views
+
+
+def _contended_batch(rhos):
+    insts = [_mr_inst(j, rho=rho) for j, rho in enumerate(rhos)]
+    cl = ClusterTimeline(n_racks=2 * len(insts), n_wireless=0)
+    return cl, _epoch_views(cl, insts)
+
+
+def _fingerprint(res):
+    return [
+        (
+            m.job_id, m.admitted, m.completion, m.makespan,
+            m.n_racks_granted, m.n_wireless_granted,
+        )
+        for m in res.jobs
+    ]
+
+
+def _counters(res):
+    return dict(
+        n_epochs=res.n_epochs, n_served=res.n_served,
+        n_backfilled=res.n_backfilled, horizon=res.horizon,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Layer 1: bit-identity regression against the PR-7 committed streams
+# ---------------------------------------------------------------------------
+
+# Captured from the pre-SLO service (fingerprints are exact floats; any
+# drift in the default admission path shows up as a hard mismatch).
+GOLDEN = {
+    "poisson_greedy": (
+        [
+            (0, 5.836739450539523, 195.78957216834257, 189.95283271780306, 4, 2),
+            (1, 16.381835878860898, 418.68809243295493, 402.30625655409403, 1, 1),
+            (2, 33.44939756803102, 327.40563586630014, 293.9562382982691, 1, 1),
+            (3, 195.78957216834257, 370.4895126568325, 174.69994048848991, 2, 2),
+            (4, 327.40563586630014, 695.9528892089182, 368.5472533426181, 1, 2),
+            (5, 370.4895126568325, 685.9593238662846, 315.4698112094522, 2, 2),
+            (6, 418.68809243295493, 955.5595087554225, 536.8714163224676, 1, 1),
+            (7, 685.9593238662846, 899.797617573844, 213.83829370755933, 2, 2),
+            (8, 695.9528892089182, 1002.8612373965613, 306.908348187643, 1, 1),
+            (9, 899.797617573844, 1125.7259381972435, 225.9283206233994, 2, 2),
+        ],
+        dict(n_epochs=15, n_served=10, n_backfilled=0,
+             horizon=1125.7259381972435),
+    ),
+    "production_greedy": (
+        [
+            (0, 15.920019856074667, 226.27434510916513, 210.35432525309045, 4, 2),
+            (1, 15.920019856074667, 336.6657294456994, 320.74570958962477, 2, 0),
+            (2, 21.21895659870807, 429.5246762110269, 408.3057196123188, 1, 2),
+            (3, 30.904245357643262, 419.53715975949956, 388.6329144018563, 1, 2),
+            (4, 226.27434510916513, 540.0038062985801, 313.729461189415, 2, 2),
+            (5, 336.6657294456994, 445.1816043123805, 108.51587486668112, 2, 0),
+            (6, 419.53715975949956, 759.9134629130151, 340.3763031535156, 1, 2),
+            (7, 429.5246762110269, 814.6102407180558, 385.08556450702895, 1, 2),
+            (8, 445.1816043123805, 658.2565358179612, 213.07493150558074, 2, 2),
+            (9, 540.0038062985801, 723.7806453308452, 183.77683903226512, 2, 0),
+        ],
+        dict(n_epochs=14, n_served=10, n_backfilled=0,
+             horizon=814.6102407180558),
+    ),
+    "production_backfill": (
+        [
+            (0, 6.320177752136479, 218.56516831668898, 212.2449905645525, 5, 2),
+            (1, 218.56516831668898, 402.23179121015073, 183.66662289346175, 4, 2),
+            (2, 402.23179121015073, 533.6377508380277, 131.40595962787697, 4, 2),
+            (3, 533.6377508380277, 772.6704786034334, 239.03272776540564, 6, 2),
+            (4, 772.6704786034334, 874.3065635008235, 101.63608489739013, 5, 2),
+            (5, 874.3065635008235, 1090.7353524984942, 216.42878899767084, 6, 2),
+            (6, 1090.7353524984942, 1303.3777668330479, 212.64241433455368, 3, 2),
+            (7, 1303.3777668330479, 1593.4139813875609, 290.03621455451304, 5, 2),
+        ],
+        dict(n_epochs=12, n_served=8, n_backfilled=0,
+             horizon=1593.4139813875609),
+    ),
+    "production_fleet": (
+        [
+            (0, 6.1001481267803985, 217.14539798702484, 211.04524986024444, 5, 2),
+            (1, 18.262137412159362, 271.7465923371507, 253.48445492499133, 2, 0),
+            (2, 217.14539798702484, 348.5513576149018, 131.40595962787697, 4, 2),
+            (3, 217.14539798702484, 691.8271308510732, 474.6817328640484, 1, 0),
+            (4, 271.7465923371507, 395.1547551642818, 123.40816282713115, 3, 1),
+        ],
+        dict(n_epochs=6, n_served=5, n_backfilled=0,
+             horizon=691.8271308510732),
+    ),
+}
+
+
+def _serve_golden(name, **extra):
+    if name == "poisson_greedy":
+        evs = poisson_arrivals(11, rate=1 / 8, n_jobs=10, n_racks=4,
+                               n_wireless=2)
+        svc = OnlineScheduler(4, 2, window=4.0, policy="greedy_list",
+                              seed=11, **extra)
+    elif name == "production_greedy":
+        evs = production_arrivals(5, rate=1 / 6, n_jobs=10, n_racks=6,
+                                  n_wireless=2)
+        svc = OnlineScheduler(6, 2, window=4.0, policy="greedy_list",
+                              seed=5, **extra)
+    elif name == "production_backfill":
+        evs = production_arrivals(3, rate=1 / 12, n_jobs=8, n_racks=6,
+                                  n_wireless=2)
+        svc = OnlineScheduler(
+            6, 2, window=5.0, policy="greedy_list", seed=3,
+            require_full_demand=True, preserve_order=True, backfill=True,
+            **extra,
+        )
+    else:  # production_fleet
+        evs = production_arrivals(3, rate=1 / 10, n_jobs=5, n_racks=6,
+                                  n_wireless=2)
+        svc = OnlineScheduler(
+            6, 2, window=5.0, seed=3,
+            solver_kwargs=dict(max_enumerate=64, n_samples=64,
+                               batch_size=256, refine_rounds=1,
+                               refine_pool=64),
+            **extra,
+        )
+    return svc.serve(evs)
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_default_admission_reproduces_pr7_goldens(name):
+    """The default service path is bit-identical to the pre-SLO loop:
+    exact float equality against hardcoded fingerprints, no tolerance."""
+    rows, ctr = GOLDEN[name]
+    res = _serve_golden(name)
+    assert _fingerprint(res) == rows
+    assert _counters(res) == ctr
+    assert res.admission == "fifo"
+    assert res.n_deadline_jobs == res.n_deadline_missed == 0
+    assert res.n_deadline_rejected == res.n_deadline_deferrals == 0
+
+
+@pytest.mark.parametrize("name", ["poisson_greedy", "production_backfill"])
+def test_fifo_admission_with_unused_slo_knobs_is_bit_identical(name):
+    """``admission="fifo"`` short-circuits before any sort, RNG draw, or
+    float work — explicitly setting it (plus inert SLO knobs) reproduces
+    the golden stream exactly."""
+    rows, ctr = GOLDEN[name]
+    res = _serve_golden(
+        name, admission="fifo", admission_control="none",
+        tenant_weights={"gold": 4.0, "bronze": 1.0}, max_overtakes=99,
+    )
+    assert _fingerprint(res) == rows
+    assert _counters(res) == ctr
+    assert res.max_overtakes_observed <= 99
+
+
+def test_tiered_stream_under_fifo_keeps_timeline_bit_identical():
+    """Tier annotation rides a decoupled RNG: the base stream and the
+    committed timeline are unchanged; only SLO accounting appears."""
+    base_evs = production_arrivals(5, rate=1 / 6, n_jobs=10, n_racks=6,
+                                   n_wireless=2)
+    tier_evs = tiered_production_arrivals(5, 1 / 6, 10, n_racks=6,
+                                          n_wireless=2)
+    assert [e.time for e in tier_evs] == [e.time for e in base_evs]
+    assert [e.job_id for e in tier_evs] == [e.job_id for e in base_evs]
+    assert [e.family for e in tier_evs] == [e.family for e in base_evs]
+    for a, b in zip(tier_evs, base_evs):
+        assert a.inst.n_racks == b.inst.n_racks
+        assert a.inst.n_wireless == b.inst.n_wireless
+        assert np.array_equal(a.inst.q_wired, b.inst.q_wired)
+    args = dict(window=4.0, policy="greedy_list", seed=5)
+    base = OnlineScheduler(6, 2, **args).serve(base_evs)
+    tier = OnlineScheduler(6, 2, **args).serve(tier_evs)
+    assert _fingerprint(tier) == _fingerprint(base) \
+        == GOLDEN["production_greedy"][0]
+    assert tier.n_deadline_jobs == sum(
+        1 for e in tier_evs if e.deadline is not None
+    ) > 0
+    assert sum(tot for _, tot in tier.tier_slo.values()) \
+        == tier.n_deadline_jobs
+    assert set(tier.tenant_queue_stats) <= {f"tenant-{i}" for i in range(3)}
+
+
+# ---------------------------------------------------------------------------
+# Layer 2: exhaustive-permutation oracle through replay_commit_order
+# ---------------------------------------------------------------------------
+
+def _edf_order(ddls):
+    return tuple(sorted(
+        range(len(ddls)),
+        key=lambda i: (ddls[i] if ddls[i] is not None else np.inf, i),
+    ))
+
+
+def _replay(cl, views, ddls, order):
+    return replay_commit_order(
+        cl, 0.0, views, order, solver=_greedy_solver, deadlines=ddls
+    )
+
+
+def _lb_deadlines(views, alpha):
+    return [alpha * lower_bound(v.inst) for v in views]
+
+
+@pytest.mark.parametrize("rhos,alpha", [
+    ((8.0, 0.5, 4.0), 2.0),
+    ((8.0, 0.5, 4.0, 2.0), 2.5),
+    ((6.0, 1.0, 3.0, 9.0, 0.25), 2.0),
+])
+def test_oracle_edf_within_miss_envelope_and_never_worse_than_fifo(
+    rhos, alpha
+):
+    """Brute force every admission order of a <= 5 job batch through the
+    real replay: EDF's miss count sits inside the oracle envelope and is
+    never worse than FIFO on these batches."""
+    cl, views = _contended_batch(rhos)
+    n = len(views)
+    ddls = _lb_deadlines(views, alpha)
+    misses = {
+        perm: _replay(cl, views, ddls, perm).n_deadline_missed
+        for perm in itertools.permutations(range(n))
+    }
+    oracle, worst = min(misses.values()), max(misses.values())
+    edf = misses[_edf_order(ddls)]
+    fifo = misses[tuple(range(n))]
+    assert oracle <= edf <= worst
+    assert edf <= fifo
+    assert worst > oracle  # the case is not vacuous: order matters
+
+
+@pytest.mark.parametrize("rhos", [
+    (8.0, 0.5, 4.0),
+    (8.0, 0.5, 4.0, 2.0),
+])
+def test_oracle_edf_is_optimal_on_slack_separated_batches(rhos):
+    """Deadlines achievable exactly in EDF order (each job's deadline is
+    its EDF-order completion): EDF misses zero — the oracle optimum —
+    while the worst order still misses, so the case is discriminative."""
+    cl, views = _contended_batch(rhos)
+    n = len(views)
+    # Volume-ordered commit (shortest wired demand first) on a single
+    # shared link; stamp each job's deadline at its completion there.
+    seed_order = tuple(sorted(
+        range(n), key=lambda i: float(np.sum(views[i].inst.q_wired))
+    ))
+    comps = _replay(cl, views, [None] * n, seed_order).completions
+    ddls = [comps[i] * (1.0 + 1e-9) for i in range(n)]
+    assert _edf_order(ddls) == seed_order
+    misses = [
+        _replay(cl, views, ddls, perm).n_deadline_missed
+        for perm in itertools.permutations(range(n))
+    ]
+    assert _replay(cl, views, ddls, _edf_order(ddls)).n_deadline_missed \
+        == min(misses) == 0
+    assert max(misses) > 0
+
+
+@pytest.mark.parametrize("rhos", [(8.0, 0.5, 4.0)])
+def test_oracle_replay_miss_prediction_matches_real_commits(rhos):
+    """For every admission order, the trial replay's completions and
+    deadline-miss count equal a real commit pass bit-for-bit."""
+    n = len(rhos)
+    ddls = None
+    for perm in itertools.permutations(range(n)):
+        cl, views = _contended_batch(rhos)
+        if ddls is None:
+            ddls = _lb_deadlines(views, 2.0)
+        predicted = _replay(cl, views, ddls, perm)
+        comps = [None] * n
+        for pos in perm:
+            view = views[pos]
+            placed = _greedy_solver(view, cl.channel_busy(view, 0.0))
+            comps[pos] = cl.commit(view, placed, 0.0)
+        cl.assert_feasible(full=True)
+        assert comps == predicted.completions
+        assert predicted.n_deadline_missed == sum(
+            1 for i in range(n) if comps[i] > ddls[i]
+        )
+        assert predicted.n_rejected == 0
+
+
+def test_replay_deadlines_length_validated():
+    cl, views = _contended_batch((4.0, 1.0))
+    with pytest.raises(ValueError, match="deadlines"):
+        _replay(cl, views, [1.0], (0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Layer 3: service-level SLO semantics
+# ---------------------------------------------------------------------------
+
+def _batch_events(rhos, ddls, tenants=None):
+    """All-at-t=0 trace of 2-rack mapreduce jobs with SLO annotations."""
+    evs = []
+    for j, rho in enumerate(rhos):
+        inst = _mr_inst(j, rho=rho)
+        ev = trace_arrivals([0.0], [inst.job], n_racks=2, n_wireless=0)[0]
+        evs.append(dataclasses.replace(
+            ev, job_id=j, deadline=ddls[j],
+            tenant=None if tenants is None else tenants[j],
+        ))
+    return evs
+
+
+def _serve_batch(evs, n_racks, **kw):
+    svc = OnlineScheduler(
+        n_racks, 0, window=1.0, policy="greedy_list", seed=0, **kw
+    )
+    return svc.serve(evs)
+
+
+def test_service_edf_reduces_misses_on_contended_batch():
+    rhos = (8.0, 0.5, 4.0, 2.0)
+    cl, views = _contended_batch(rhos)
+    ddls = _lb_deadlines(views, 2.5)
+    evs = _batch_events(rhos, ddls)
+    fifo = _serve_batch(evs, 2 * len(rhos))
+    edf = _serve_batch(evs, 2 * len(rhos), admission="edf")
+    for res in (fifo, edf):
+        res.timeline.assert_feasible(full=True)
+        assert res.n_served == len(rhos)
+        assert res.n_deadline_jobs == len(rhos)
+    assert edf.n_deadline_missed < fifo.n_deadline_missed
+    assert edf.n_deadline_missed == sum(m.deadline_missed for m in edf.jobs)
+    assert edf.admission == "edf"
+    assert "adm=edf" in edf.summary()
+
+
+def test_admission_control_reject_drops_provably_unmeetable():
+    """``now + lower_bound(inst) > deadline`` is a rigorous proof the
+    deadline is unmeetable on *any* residual cluster — the job is dropped
+    at arrival, never served, and excluded from JCT aggregates."""
+    rhos = (4.0, 1.0)
+    lb0 = lower_bound(_mr_inst(0, rho=4.0))
+    evs = _batch_events(rhos, [0.5 * lb0, None])
+    res = _serve_batch(evs, 4, admission="edf", admission_control="reject")
+    res.timeline.assert_feasible(full=True)
+    assert res.n_deadline_rejected == 1
+    assert res.rejected_job_ids == [0]
+    assert res.n_served == 1 and [m.job_id for m in res.jobs] == [1]
+    assert "rejected=1" in res.summary()
+    # A meetable deadline is NOT rejected: the proof is sound, not greedy.
+    ok = _serve_batch(
+        _batch_events(rhos, [10.0 * lb0, None]), 4,
+        admission="edf", admission_control="reject",
+    )
+    assert ok.n_deadline_rejected == 0 and ok.n_served == 2
+
+
+def test_admission_control_defer_postpones_replayed_late_commits():
+    """Under ``defer``, a commit whose arbitrated completion overruns the
+    deadline is postponed while the job can still make it; every job is
+    still served (no drops) and the audit passes."""
+    rhos = (8.0, 0.5, 4.0, 2.0)
+    cl, views = _contended_batch(rhos)
+    ddls = _lb_deadlines(views, 2.5)
+    evs = _batch_events(rhos, ddls)
+    res = _serve_batch(
+        evs, 2 * len(rhos), admission="edf", admission_control="defer",
+    )
+    res.timeline.assert_feasible(full=True)
+    assert res.n_served == len(rhos)
+    assert res.n_deadline_deferrals >= 1
+    assert "deferrals=" in res.summary()
+
+
+def _flood_events(ddls, tenants=None):
+    """j0 occupies the full 2-rack cluster; j1..j3 queue behind it."""
+    rhos = (6.0, 2.0, 2.0, 2.0)
+    evs = []
+    for j, rho in enumerate(rhos):
+        inst = _mr_inst(10 + j, rho=rho)
+        ev = trace_arrivals(
+            [0.0 if j == 0 else 0.5 + 0.1 * j], [inst.job],
+            n_racks=2, n_wireless=0,
+        )[0]
+        evs.append(dataclasses.replace(
+            ev, job_id=j, deadline=ddls[j],
+            tenant=None if tenants is None else tenants[j],
+        ))
+    return evs
+
+
+def _serve_flood(evs, **kw):
+    svc = OnlineScheduler(
+        2, 0, window=0.5, policy="greedy_list", seed=0,
+        require_full_demand=True, **kw
+    )
+    return svc.serve(evs)
+
+
+def test_edf_overtakes_are_counted_and_hoisting_enforces_bound():
+    """j3 carries the earliest deadline and jumps the queue under EDF;
+    the overtaken jobs' counts are recorded, and with ``max_overtakes=1``
+    the saturated job is hoisted ahead of later deadlines."""
+    ddls = [None, 400.0, 300.0, 100.0]
+    evs = _flood_events(ddls)
+    free = _serve_flood(evs, admission="edf")
+    free.timeline.assert_feasible(full=True)
+    order_free = sorted(range(4), key=lambda j: free.jobs[j].admitted)
+    assert order_free == [0, 3, 2, 1]  # EDF: earliest deadline first
+    assert free.jobs[1].n_overtaken == 2  # j3 and j2 both jumped j1
+    assert free.jobs[2].n_overtaken == 1
+    assert free.max_overtakes_observed == 2
+
+    capped = _serve_flood(evs, admission="edf", max_overtakes=1)
+    capped.timeline.assert_feasible(full=True)
+    order_capped = sorted(range(4), key=lambda j: capped.jobs[j].admitted)
+    # j3 jumps once; j1 is then saturated and hoisted ahead of j2's
+    # earlier deadline.
+    assert order_capped == [0, 3, 1, 2]
+    assert capped.max_overtakes_observed <= 1
+    for m in capped.jobs:
+        assert m.n_overtaken <= 1
+
+
+def test_max_overtakes_zero_restores_bitexact_fifo_stream():
+    """``max_overtakes=0`` forbids every overtake: the EDF service
+    degenerates to the FIFO stream bit-for-bit."""
+    ddls = [None, 400.0, 300.0, 100.0]
+    evs = _flood_events(ddls)
+    fifo = _serve_flood(evs)
+    pinned = _serve_flood(evs, admission="edf", max_overtakes=0)
+    assert _fingerprint(pinned) == _fingerprint(fifo)
+    assert pinned.max_overtakes_observed == 0
+
+
+def test_wfair_serves_light_tenant_ahead_of_heavy_backlog():
+    ddls = [None] * 4
+    tenants = ["heavy", "heavy", "heavy", "light"]
+    evs = _flood_events(ddls, tenants)
+    fifo = _serve_flood(evs)
+    wfair = _serve_flood(
+        evs, admission="wfair",
+        tenant_weights={"heavy": 1.0, "light": 1.0},
+    )
+    wfair.timeline.assert_feasible(full=True)
+    # After j0 commits, tenant "heavy" has attained service and "light"
+    # has none: j3 is served ahead of j1/j2.
+    assert wfair.jobs[3].admitted < fifo.jobs[3].admitted
+    order = sorted(range(4), key=lambda j: wfair.jobs[j].admitted)
+    assert order == [0, 3, 1, 2]
+    assert set(wfair.tenant_queue_stats) == {"heavy", "light"}
+    assert set(wfair.tenant_p99_queueing_delay) == {"heavy", "light"}
+    assert "tenant_p99q(" in wfair.summary()
+
+
+def test_constructor_validation_for_slo_knobs():
+    with pytest.raises(ValueError, match="admission must be"):
+        OnlineScheduler(4, 0, admission="lifo")
+    with pytest.raises(ValueError, match="admission_control must be"):
+        OnlineScheduler(4, 0, admission_control="drop")
+    with pytest.raises(ValueError, match="max_overtakes"):
+        OnlineScheduler(4, 0, max_overtakes=-1)
+    with pytest.raises(ValueError, match="tenant_weights"):
+        OnlineScheduler(4, 0, tenant_weights={"a": 0.0})
+
+
+def test_edf_solo_baseline_registered_and_deadline_aware():
+    """``edf_solo`` shares ``fifo_solo``'s placement (apples-to-apples:
+    only the admission order differs) and auto-selects EDF admission."""
+    assert ONLINE_BASELINES["edf_solo"] is edf_solo_schedule
+    inst = _mr_inst(0, rho=2.0)
+    a = edf_solo_schedule(inst, use_wireless=False)
+    b = ONLINE_BASELINES["fifo_solo"](inst, use_wireless=False)
+    assert a.makespan == b.makespan
+
+    svc = OnlineScheduler(2, 0, policy="edf_solo", window=0.5)
+    assert svc.admission == "edf"
+    # Explicit admission choices are respected, not overwritten.
+    assert OnlineScheduler(
+        2, 0, policy="edf_solo", window=0.5, admission="wfair"
+    ).admission == "wfair"
+
+    # j1 (short, tight deadline) arrives behind j0 (long, loose): solo
+    # EDF serves j1 first and meets both; solo FIFO misses j1's deadline.
+    insts = [_mr_inst(1, rho=6.0), _mr_inst(2, rho=1.0)]
+    lbs = [lower_bound(i) for i in insts]
+    evs = trace_arrivals(
+        [0.0, 0.0], [i.job for i in insts], n_racks=2, n_wireless=0,
+    )
+    ddls = [20.0 * (lbs[0] + lbs[1]), 2.0 * lbs[1]]
+    evs = [
+        dataclasses.replace(e, job_id=j, deadline=ddls[j])
+        for j, e in enumerate(evs)
+    ]
+    fifo = OnlineScheduler(
+        2, 0, policy="fifo_solo", window=0.5
+    ).serve(evs)
+    edf = OnlineScheduler(2, 0, policy="edf_solo", window=0.5).serve(evs)
+    for res in (fifo, edf):
+        res.timeline.assert_feasible(full=True)
+        assert res.n_served == 2
+    assert edf.jobs[1].admitted < edf.jobs[0].admitted
+    assert edf.n_deadline_missed < fifo.n_deadline_missed
+
+
+# ---------------------------------------------------------------------------
+# Layer 4: property layer (Hypothesis with seeded fallback)
+# ---------------------------------------------------------------------------
+
+def _check_tiered_overload_serve(seed):
+    admission = ("edf", "wfair")[seed % 2]
+    control = ("none", "defer")[(seed // 2) % 2]
+    evs = tiered_production_arrivals(
+        seed, 1 / 3, 8, n_racks=4, n_wireless=2,
+    )
+    svc = OnlineScheduler(
+        4, 2, window=4.0, policy="greedy_list", seed=seed,
+        admission=admission, admission_control=control, max_overtakes=3,
+        tenant_weights={t.name: t.share for t in DEFAULT_SLO_TIERS},
+    )
+    res = svc.serve(evs)
+    res.timeline.assert_feasible(full=True)
+    assert res.n_served == 8 and res.n_deadline_rejected == 0
+    # Starvation bound: no job is ever overtaken past the allowance.
+    assert res.max_overtakes_observed <= 3
+    assert all(m.n_overtaken <= 3 for m in res.jobs)
+    # SLO counters reconcile with the per-job records.
+    assert res.n_deadline_jobs == sum(
+        1 for m in res.jobs if m.deadline is not None
+    )
+    assert res.n_deadline_missed == sum(
+        m.deadline_missed for m in res.jobs
+    )
+    assert sum(tot for _, tot in res.tier_slo.values()) \
+        == res.n_deadline_jobs
+    for tier, frac in res.slo_attainment.items():
+        met, tot = res.tier_slo[tier]
+        assert frac == pytest.approx(met / tot)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=10,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_tiered_overload_serves_feasibly_hypothesis(seed):
+        _check_tiered_overload_serve(seed)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_tiered_overload_serves_feasibly_seeded(seed):
+        _check_tiered_overload_serve(seed)
+
+
+# ---------------------------------------------------------------------------
+# Layer 5: backfill interaction (PR-5 head-of-line protections re-locked)
+# ---------------------------------------------------------------------------
+
+def _scaled(job, factor):
+    return dataclasses.replace(job, p=job.p * factor, d=job.d * factor)
+
+
+def _hol_stream(tail_factor):
+    """The PR-5 head-of-line trace: t=0 a long 3-rack job takes racks
+    0-2 of a 4-rack cluster; t=1 a 2-rack job arrives (blocked); t=2 a
+    1-rack job scaled by ``tail_factor`` arrives behind it."""
+    rng = np.random.default_rng(9)
+    jobs = [
+        _scaled(random_job(rng, None, n_tasks=6), 10.0),
+        random_job(rng, None, n_tasks=6),
+        _scaled(random_job(rng, None, n_tasks=5), tail_factor),
+    ]
+    evs = trace_arrivals([0.0, 1.0, 2.0], jobs, n_racks=4, n_wireless=0)
+    demands = (3, 2, 1)
+    return [
+        dataclasses.replace(e, inst=dataclasses.replace(e.inst, n_racks=d))
+        for e, d in zip(evs, demands)
+    ]
+
+
+def _serve_hol(evs, admission, **kw):
+    svc = OnlineScheduler(
+        4, 0, window=0.0, policy="greedy_list", require_full_demand=True,
+        preserve_order=True, backfill=True, admission=admission, **kw
+    )
+    return svc.serve(evs)
+
+
+@pytest.mark.parametrize("admission", ["edf", "wfair"])
+def test_admission_reorder_preserves_hol_backfill_protections(admission):
+    """On the deadline-less PR-5 trace the non-FIFO orders are arrival
+    ties: backfill counters and every admission epoch re-lock exactly."""
+    evs = _hol_stream(tail_factor=0.02)
+    fifo = _serve_hol(evs, "fifo")
+    re = _serve_hol(evs, admission, tenant_weights={"unused": 2.0})
+    assert re.n_backfilled == fifo.n_backfilled == 1
+    assert re.jobs[2].backfilled
+    assert re.jobs[2].admitted == 2.0  # its own arrival epoch
+    assert re.jobs[1].admitted == fifo.jobs[1].admitted
+    assert re.jobs[0].admitted == fifo.jobs[0].admitted == 0.0
+    # The backfill overtake is recorded against the blocked job.
+    assert re.jobs[1].n_overtaken == 1
+    re.timeline.assert_feasible(full=True)
+
+
+@pytest.mark.parametrize("admission", ["edf", "wfair"])
+def test_admission_reorder_keeps_backfill_rejections(admission):
+    """A long job the shadow-slack proof cannot clear stays rejected no
+    matter the admission order."""
+    evs = _hol_stream(tail_factor=50.0)
+    fifo = _serve_hol(evs, "fifo")
+    re = _serve_hol(evs, admission)
+    assert re.n_backfilled == fifo.n_backfilled == 0
+    assert re.n_backfill_rejected >= 1
+    assert [j.jct for j in re.jobs] == [j.jct for j in fifo.jobs]
+
+
+def test_hol_backfill_respects_max_overtakes_zero():
+    """``max_overtakes=0`` also forbids the backfill overtake itself:
+    the tail job waits behind the blocked head-of-line job."""
+    evs = _hol_stream(tail_factor=0.02)
+    res = _serve_hol(evs, "fifo", max_overtakes=0)
+    assert res.n_backfilled == 0
+    assert res.max_overtakes_observed == 0
+    assert res.jobs[1].admitted <= res.jobs[2].admitted
+    res.timeline.assert_feasible(full=True)
+
+
+# ---------------------------------------------------------------------------
+# Units: tiered generators and summary rendering
+# ---------------------------------------------------------------------------
+
+def test_tiered_generators_are_deterministic_and_annotated():
+    a = tiered_poisson_arrivals(7, 1 / 8, 12, n_racks=4, n_wireless=2)
+    b = tiered_poisson_arrivals(7, 1 / 8, 12, n_racks=4, n_wireless=2)
+    assert [(e.time, e.tier, e.tenant, e.deadline) for e in a] \
+        == [(e.time, e.tier, e.tenant, e.deadline) for e in b]
+    names = {t.name: t for t in DEFAULT_SLO_TIERS}
+    assert {e.tier for e in a} <= set(names)
+    for e in a:
+        tier = names[e.tier]
+        if tier.slack is None:
+            assert e.deadline is None
+        else:
+            assert e.deadline == e.time + tier.slack * lower_bound(e.inst)
+        assert e.tenant.startswith("tenant-")
+    # Base stream bit-identity (times and DAG volumes).
+    base = poisson_arrivals(7, rate=1 / 8, n_jobs=12, n_racks=4,
+                            n_wireless=2)
+    assert [e.time for e in a] == [e.time for e in base]
+    for x, y in zip(a, base):
+        assert np.array_equal(x.inst.q_wired, y.inst.q_wired)
+
+
+def test_stream_tiered_arrivals_custom_tiers_and_validation():
+    tiers = (SloTier("rt", weight=1.0, slack=1.5, share=3.0),)
+    evs = poisson_arrivals(3, rate=1 / 4, n_jobs=5, n_racks=2,
+                           n_wireless=0)
+    out = list(stream_tiered_arrivals(evs, 3, tiers=tiers, n_tenants=1))
+    assert all(e.tier == "rt" and e.tenant == "tenant-0" for e in out)
+    assert all(e.deadline is not None for e in out)
+    with pytest.raises(ValueError, match="non-empty"):
+        list(stream_tiered_arrivals(evs, 3, tiers=()))
+    with pytest.raises(ValueError, match="weights"):
+        list(stream_tiered_arrivals(
+            evs, 3, tiers=(SloTier("x", weight=-1.0, slack=None),)
+        ))
+    with pytest.raises(ValueError, match="slack"):
+        list(stream_tiered_arrivals(
+            evs, 3, tiers=(SloTier("x", weight=1.0, slack=0.0),)
+        ))
+    with pytest.raises(ValueError, match="share"):
+        list(stream_tiered_arrivals(
+            evs, 3, tiers=(SloTier("x", weight=1.0, slack=1.0, share=0.0),)
+        ))
+    with pytest.raises(ValueError, match="n_tenants"):
+        list(stream_tiered_arrivals(evs, 3, n_tenants=0))
+
+
+def _toy_result(**kw):
+    jobs = [
+        JobMetrics(0, "mapreduce", 0.0, 0.0, 5.0, 5.0, 2, 0, 1,
+                   deadline=6.0, tenant="acme", tier="gold"),
+        JobMetrics(1, "mapreduce", 1.0, 5.0, 12.0, 7.0, 2, 0, 1,
+                   deadline=10.0, tenant="acme", tier="silver",
+                   n_overtaken=2),
+    ]
+    base = dict(
+        jobs=jobs, policy="greedy_list", warm_start=False, n_epochs=3,
+        n_batches=0, n_solves=2, n_candidates=0, n_pruned=0,
+        solver_wall=0.0, horizon=12.0, rack_utilization=0.5,
+        wired_utilization=0.25, wireless_utilization=0.0,
+    )
+    base.update(kw)
+    return OnlineResult(**base)
+
+
+def test_deadline_missed_property_and_slo_attainment():
+    res = _toy_result(
+        admission="edf", n_deadline_jobs=2, n_deadline_missed=1,
+        tier_slo={"gold": (1, 1), "silver": (0, 1)},
+    )
+    assert not res.jobs[0].deadline_missed
+    assert res.jobs[1].deadline_missed
+    assert res.slo_attainment == {"gold": 1.0, "silver": 0.0}
+
+
+def test_summary_renders_slo_fields_and_inf_solver_rate():
+    stats = StreamingSeries()
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        stats.push(v)
+    res = _toy_result(
+        admission="edf", n_deadline_jobs=2, n_deadline_missed=1,
+        n_deadline_deferrals=2, n_deadline_rejected=1,
+        rejected_job_ids=[7], tier_slo={"gold": (1, 1), "silver": (0, 1)},
+        tenant_queue_stats={"acme": stats}, max_overtakes_observed=2,
+    )
+    s = res.summary()
+    assert "adm=edf" in s
+    assert "misses=1/2" in s
+    assert "slo(gold=1.00,silver=0.00)" in s
+    assert "deferrals=2" in s
+    assert "rejected=1" in s
+    assert "max_overtaken=2" in s
+    assert "tenant_p99q(acme=" in s
+    # solver_wall=0 with served jobs: the rate renders as literal "inf".
+    assert "jobs_per_solver_s=inf" in s
+
+
+def test_summary_omits_slo_section_for_plain_fifo_runs():
+    res = _toy_result()
+    res.jobs[0] = dataclasses.replace(res.jobs[0], deadline=None)
+    res.jobs[1] = dataclasses.replace(res.jobs[1], deadline=None)
+    s = res.summary()
+    assert "adm=" not in s
+    assert "slo(" not in s
+    # FIFO runs that *did* carry deadlines still render the SLO section.
+    tracked = _toy_result(n_deadline_jobs=2, n_deadline_missed=1)
+    assert "adm=fifo" in tracked.summary()

@@ -355,7 +355,7 @@ def test_online_baselines_run_and_fifo_solo_serializes():
     _, greedy = _serve(seed=2, rate=1 / 10, n_jobs=5, policy="greedy_list")
     assert greedy.n_candidates == 0  # no search in the baseline
     assert len(greedy.jobs) == 5
-    assert set(ONLINE_BASELINES) == {"fifo_solo", "greedy_list"}
+    assert set(ONLINE_BASELINES) == {"fifo_solo", "edf_solo", "greedy_list"}
 
 
 def test_unknown_policy_rejected():

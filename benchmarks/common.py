@@ -29,7 +29,10 @@ RESULTS: list[dict] = []
 # v2: every result record carries a "kind" discriminator — "timing" for
 # classic us_per_call rows, "stress" for the online stress-lane records
 # (sustained-throughput runs whose metrics carry percentile latencies and
-# the flat-latency ratio).
+# the flat-latency ratio), "slo" for the admission-SLO comparison rows,
+# and "solver_throughput" for the engine's sustained candidate-throughput
+# records (cands_per_s, mega-batch speedup). New kinds are additive, not
+# schema breaks.
 BENCH_SCHEMA = "repro-bench-v2"
 
 

@@ -498,20 +498,14 @@ def run_admission_slo(smoke: bool = False) -> bool:
 STRESS_LATENCY_RATIO = 1.5
 STRESS_COMPACT = 8
 STRESS_CLUSTER = dict(n_racks=8, n_wireless=2)
+# Tracer-overhead acceptance bound for the --trace arm: a fully traced
+# serve (spans + decision events + job marks every epoch) must finish
+# within this factor of the untraced NullTracer serve.
+TRACER_OVERHEAD_RATIO = 1.05
 
 
-def run_stress(n_jobs: int = 100_000, rate: float = 1 / 60, seed: int = 0) -> float:
-    """Sustained-throughput stress lane; returns the flat-latency ratio.
-
-    Serves ``n_jobs`` streamed production arrivals end to end and measures
-    the wall time of every epoch's arbitrate-and-commit stage. With the
-    interval index compacting every ``STRESS_COMPACT`` epochs the
-    steady-state cost depends only on *active* jobs, so the per-epoch
-    commit latency must stay flat: the second-half mean is required to be
-    within ``STRESS_LATENCY_RATIO`` x the first-half mean. Emits one
-    ``kind="stress"`` BENCH record with the streaming p50/p90/p99
-    queueing-delay and JCT percentiles and the peak gauges.
-    """
+def _stress_serve(n_jobs: int, rate: float, seed: int, tracer=None):
+    """One stress-lane serve (shared by the untraced and traced arms)."""
     evs = stream_production_arrivals(
         seed,
         rate=rate,
@@ -529,10 +523,38 @@ def run_stress(n_jobs: int = 100_000, rate: float = 1 / 60, seed: int = 0) -> fl
         compact_interval=STRESS_COMPACT,
         record_jobs=False,
         track_epoch_latency=True,
+        tracer=tracer,
     )
     t0 = time.perf_counter()
     res = svc.serve(evs)
-    wall = time.perf_counter() - t0
+    return res, time.perf_counter() - t0
+
+
+def run_stress(
+    n_jobs: int = 100_000,
+    rate: float = 1 / 60,
+    seed: int = 0,
+    trace_out: str | None = None,
+) -> tuple[float, float | None]:
+    """Sustained-throughput stress lane; returns (flat-latency ratio,
+    tracer-overhead ratio or None).
+
+    Serves ``n_jobs`` streamed production arrivals end to end and measures
+    the wall time of every epoch's arbitrate-and-commit stage. With the
+    interval index compacting every ``STRESS_COMPACT`` epochs the
+    steady-state cost depends only on *active* jobs, so the per-epoch
+    commit latency must stay flat: the second-half mean is required to be
+    within ``STRESS_LATENCY_RATIO`` x the first-half mean. Emits one
+    ``kind="stress"`` BENCH record with the streaming p50/p90/p99
+    queueing-delay and JCT percentiles and the peak gauges.
+
+    With ``trace_out`` set, the same stream is served a second time under
+    a live :class:`repro.obs.Tracer`, the Perfetto trace is written to
+    ``trace_out``, and the record gains ``traced_wall_s`` /
+    ``tracer_overhead`` fields; the simulated outcome must match the
+    untraced serve exactly.
+    """
+    res, wall = _stress_serve(n_jobs, rate, seed)
     if res.n_jobs != n_jobs:
         raise RuntimeError(f"stress lane served {res.n_jobs}/{n_jobs} jobs")
     lat = res.epoch_commit_latency
@@ -541,9 +563,7 @@ def run_stress(n_jobs: int = 100_000, rate: float = 1 / 60, seed: int = 0) -> fl
     second = float(np.mean(lat[half:]))
     ratio = second / first if first > 0 else float("inf")
     tl = res.timeline
-    emit(
-        f"online_stress_greedy_list_{n_jobs // 1000}k",
-        1e6 * wall / n_jobs,
+    derived = (
         f"n_jobs={res.n_jobs};n_epochs={res.n_epochs}"
         f";wall_s={wall:.1f};jobs_per_s={res.n_jobs / wall:.0f}"
         f";latency_ratio={ratio:.3f}"
@@ -557,10 +577,36 @@ def run_stress(n_jobs: int = 100_000, rate: float = 1 / 60, seed: int = 0) -> fl
         f";intervals_retained={tl.n_intervals}"
         f";intervals_compacted={tl.n_compacted}"
         f";rack_util={res.rack_utilization:.2f}"
-        f";wired_util={res.wired_utilization:.2f}",
+        f";wired_util={res.wired_utilization:.2f}"
+    )
+    overhead = None
+    if trace_out:
+        from repro.obs import Tracer, write_chrome_trace
+
+        tracer = Tracer()
+        traced, traced_wall = _stress_serve(n_jobs, rate, seed, tracer=tracer)
+        if (traced.n_jobs, traced.n_epochs, traced.horizon) != (
+            res.n_jobs, res.n_epochs, res.horizon,
+        ):
+            raise RuntimeError("traced stress serve diverged from untraced")
+        overhead = traced_wall / wall
+        write_chrome_trace(tracer, trace_out)
+        print(
+            f"wrote Perfetto trace ({len(tracer.spans)} spans, "
+            f"{len(tracer.job_marks)} job marks) -> {trace_out}",
+            flush=True,
+        )
+        derived += (
+            f";traced_wall_s={traced_wall:.1f}"
+            f";tracer_overhead={overhead:.3f}"
+        )
+    emit(
+        f"online_stress_greedy_list_{n_jobs // 1000}k",
+        1e6 * wall / n_jobs,
+        derived,
         kind="stress",
     )
-    return ratio
+    return ratio, overhead
 
 
 def main(argv=None):
@@ -585,6 +631,14 @@ def main(argv=None):
         default=100_000,
         metavar="N",
         help="stress-lane stream length (CI smoke uses a reduced scale)",
+    )
+    parser.add_argument(
+        "--trace",
+        metavar="OUT.JSON",
+        default=None,
+        help="with --stress: serve the stream a second time under a live "
+        "tracer, write the Chrome/Perfetto trace here, and gate the "
+        f"tracer overhead at {TRACER_OVERHEAD_RATIO}x the untraced wall",
     )
     parser.add_argument(
         "--admission-slo",
@@ -621,12 +675,15 @@ def main(argv=None):
                   "misses at every smoke rate", flush=True)
         return
     if args.stress:
-        ratio = run_stress(n_jobs=args.stress_jobs)
+        ratio, overhead = run_stress(
+            n_jobs=args.stress_jobs, trace_out=args.trace
+        )
         if args.json:
             common.write_json(
                 args.json,
                 bench="online_serving_stress",
-                config={"n_jobs": args.stress_jobs},
+                config={"n_jobs": args.stress_jobs,
+                        "traced": args.trace is not None},
             )
         if ratio > STRESS_LATENCY_RATIO:
             raise SystemExit(
@@ -638,6 +695,18 @@ def main(argv=None):
             f"{STRESS_LATENCY_RATIO}x",
             flush=True,
         )
+        if overhead is not None:
+            if overhead > TRACER_OVERHEAD_RATIO:
+                raise SystemExit(
+                    f"tracer-overhead check FAILED: traced serve "
+                    f"{overhead:.3f}x untraced (bound "
+                    f"{TRACER_OVERHEAD_RATIO}x)"
+                )
+            print(
+                f"tracer-overhead check passed: {overhead:.3f}x <= "
+                f"{TRACER_OVERHEAD_RATIO}x",
+                flush=True,
+            )
         return
     if not args.skip_sweep:
         run()

@@ -88,6 +88,7 @@ def run_sampled_throughput():
         1e6 * wall / n_inst,
         f"cands_per_s={total_cands / wall:.0f};lb_pruned={total_pruned}/{total_cands}"
         f";instances={n_inst}",
+        kind="solver_throughput",
     )
 
 
@@ -124,6 +125,7 @@ def run_fleet_megabatch():
         f";lb_pruned={fleet.n_pruned}/{fleet.n_candidates}"
         f";launches=s1:{fleet.n_stage1_launches},s2:{fleet.n_stage2_launches}"
         f";traces=s1:{fleet.n_stage1_traces},s2:{fleet.n_stage2_traces}",
+        kind="solver_throughput",
     )
 
 
@@ -188,13 +190,26 @@ def run_portfolio_refinement():
 def main(argv=None):
     from benchmarks import common
 
-    args = common.bench_arg_parser(__doc__).parse_args(argv)
-    run()
+    parser = common.bench_arg_parser(__doc__)
+    parser.add_argument(
+        "--throughput",
+        action="store_true",
+        help="run only the sustained-throughput sections (the "
+        'kind="solver_throughput" BENCH records) — skips the slow '
+        "MILP/B&B scaling sweep and the portfolio study",
+    )
+    args = parser.parse_args(argv)
+    if not args.throughput:
+        run()
     run_sampled_throughput()
     run_fleet_megabatch()
-    run_portfolio_refinement()
+    if not args.throughput:
+        run_portfolio_refinement()
     if args.json:
-        common.write_json(args.json, bench="solver_scaling")
+        common.write_json(
+            args.json, bench="solver_scaling",
+            config={"throughput_only": args.throughput},
+        )
 
 
 if __name__ == "__main__":

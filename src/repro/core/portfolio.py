@@ -67,6 +67,7 @@ __all__ = [
     "spec_length",
     "merge_strategy_stats",
     "mutate_pool",
+    "stats_snapshot",
 ]
 
 
@@ -354,6 +355,26 @@ class StrategyStats:
     def yield_per_eval(self) -> float:
         """Improvement per evaluated candidate — the allocator's signal."""
         return self.improvement / self.evaluated if self.evaluated else 0.0
+
+
+def stats_snapshot(stats: dict[str, StrategyStats]) -> dict[str, dict]:
+    """Plain-dict snapshot of per-strategy counters, sorted by name.
+
+    The trace layer attaches this to its ``portfolio_yields`` decision
+    events — JSON-serializable, no live :class:`StrategyStats` refs.
+    """
+    return {
+        name: {
+            "proposed": s.proposed,
+            "pruned": s.pruned,
+            "evaluated": s.evaluated,
+            "improved": s.improved,
+            "improvement": s.improvement,
+            "weight": s.weight,
+            "yield_per_eval": s.yield_per_eval,
+        }
+        for name, s in sorted(stats.items())
+    }
 
 
 def merge_strategy_stats(

@@ -69,6 +69,7 @@ from repro.core import portfolio as portfolio_mod
 from repro.core.instance import ProblemInstance
 from repro.core.schedule import Schedule
 from repro.core.simulator import OP_EDGE, OP_TASK, build_op_tables, pad_op_tables, simulate
+from repro.obs.trace import as_tracer
 
 __all__ = [
     "enumerate_assignments",
@@ -828,6 +829,7 @@ def _run_fleet(
     refine_patience: int | None = None,
     seed_pools=None,
     op_tables=None,
+    tracer=None,
 ):
     """Lockstep fleet driver: one mega-batch launch geometry per stage.
 
@@ -835,7 +837,13 @@ def _run_fleet(
     launch ``[I * batch_size]`` rounded up to the device count, so the whole
     fleet run traces (at most) one program per stage no matter how pruning
     fragments the candidate streams.
+
+    ``tracer`` (a :class:`repro.obs.trace.Tracer` or ``None``) records a
+    wall-time span per stage-1/stage-2 device dispatch, the fleet's
+    candidate/prune/launch/retrace totals as a ``fleet_solve`` event, and
+    the per-strategy refinement yields as a ``portfolio_yields`` event.
     """
+    tr = as_tracer(tracer)
     I = len(instances)
     if op_tables is None:
         op_tables = [build_op_tables(inst) for inst in instances]
@@ -887,7 +895,10 @@ def _run_fleet(
                 lo = s * batch_size
                 rack[lo : lo + batch_size, : st.n] = blk
                 iid[lo : lo + batch_size] = st.idx
-            vals = np.asarray(fn(jnp.asarray(rack), jnp.asarray(iid), *eval_tables))
+            with tr.span("stage2_launch", rows=B2):
+                vals = np.asarray(
+                    fn(jnp.asarray(rack), jnp.asarray(iid), *eval_tables)
+                )
             launches[1] += 1
             for s, (st, blk, tb, tg) in enumerate(group):
                 lo = s * batch_size
@@ -899,12 +910,13 @@ def _run_fleet(
             return []
         if not use_kernel:
             launches[0] += len(reqs)
-            return [
-                batched_lower_bound(
-                    st.inst, chunk, use_kernel=False, contention=contention
-                )
-                for st, chunk in reqs
-            ]
+            with tr.span("stage1_launch", n_requests=len(reqs), kernel=False):
+                return [
+                    batched_lower_bound(
+                        st.inst, chunk, use_kernel=False, contention=contention
+                    )
+                    for st, chunk in reqs
+                ]
         out = [np.empty(chunk.shape[0], np.float32) for _, chunk in reqs]
         pieces = []
         for ri, (_st, chunk) in enumerate(reqs):
@@ -919,17 +931,18 @@ def _run_fleet(
                 lo = s * batch_size
                 rack[lo : lo + rows.shape[0], : st.n] = rows
                 iid[lo : lo + batch_size] = st.idx
-            lbs = np.asarray(
-                _fleet_lb_device(
-                    jnp.asarray(rack),
-                    jnp.asarray(iid),
-                    *lb_args,
-                    M_pad=dims.M_pad,
-                    n_iters=dims.n_iters,
-                    block_b=min(1024, B1),
-                    contention=contention,
+            with tr.span("stage1_launch", rows=B1, kernel=True):
+                lbs = np.asarray(
+                    _fleet_lb_device(
+                        jnp.asarray(rack),
+                        jnp.asarray(iid),
+                        *lb_args,
+                        M_pad=dims.M_pad,
+                        n_iters=dims.n_iters,
+                        block_b=min(1024, B1),
+                        contention=contention,
+                    )
                 )
-            )
             launches[0] += 1
             for s, (ri, off, rows) in enumerate(group):
                 lo = s * batch_size
@@ -1026,6 +1039,29 @@ def _run_fleet(
         "n_stage1_traces": LB_TRACE_COUNT - t1_0,
         "n_stage2_traces": TRACE_COUNT - t2_0,
     }
+    if tr.enabled:
+        tr.count("stage1_launches", launches[0])
+        tr.count("stage2_launches", launches[1])
+        tr.count(
+            "compile_cache_misses",
+            stats["n_stage1_traces"] + stats["n_stage2_traces"],
+        )
+        tr.event(
+            "fleet_solve",
+            n_instances=I,
+            n_candidates=sum(s.n_cands for s in states),
+            n_pruned=sum(s.n_pruned for s in states),
+            n_evaluated=sum(s.n_eval for s in states),
+            **stats,
+        )
+        merged = portfolio_mod.merge_strategy_stats(
+            s.portfolio.stats for s in states
+        )
+        if merged:
+            tr.event(
+                "portfolio_yields",
+                strategies=portfolio_mod.stats_snapshot(merged),
+            )
     return results, stats
 
 
@@ -1044,6 +1080,7 @@ def vectorized_search(
     strategies=None,
     refine_patience: int | None = None,
     seed_pool: np.ndarray | None = None,
+    tracer=None,
 ) -> VectorizedResult:
     """Best-of-batch schedule search with bound-driven pruning.
 
@@ -1099,27 +1136,33 @@ def vectorized_search(
         already covers every canonical assignment). Scored seeds enter
         the refinement portfolio's elite pool like any sweep candidate,
         so crossover can recombine them from round one.
+      tracer: optional :class:`repro.obs.trace.Tracer` recording
+        per-stage device-dispatch spans and the solve's candidate /
+        prune / retrace totals (``None`` = no tracing; bit-identical).
 
     Returns:
       :class:`VectorizedResult` (per-strategy refinement counters in
       ``strategy_stats``).
     """
-    results, _ = _run_fleet(
-        [inst],
-        max_enumerate=max_enumerate,
-        n_samples=n_samples,
-        seeds=[seed],
-        use_wireless=use_wireless,
-        batch_size=batch_size,
-        lb_prune=lb_prune,
-        use_kernel=use_kernel,
-        contention=contention,
-        refine_rounds=refine_rounds,
-        refine_pool=refine_pool,
-        strategies=strategies,
-        refine_patience=refine_patience,
-        seed_pools=[seed_pool],
-    )
+    tr = as_tracer(tracer)
+    with tr.span("schedule_fleet", n_instances=1):
+        results, _ = _run_fleet(
+            [inst],
+            max_enumerate=max_enumerate,
+            n_samples=n_samples,
+            seeds=[seed],
+            use_wireless=use_wireless,
+            batch_size=batch_size,
+            lb_prune=lb_prune,
+            use_kernel=use_kernel,
+            contention=contention,
+            refine_rounds=refine_rounds,
+            refine_pool=refine_pool,
+            strategies=strategies,
+            refine_patience=refine_patience,
+            seed_pools=[seed_pool],
+            tracer=tr,
+        )
     return results[0]
 
 
@@ -1139,6 +1182,7 @@ def schedule_fleet(
     refine_patience: int | None = None,
     seed_pools=None,
     op_tables=None,
+    tracer=None,
 ) -> FleetResult:
     """Solve a heterogeneous fleet of instances in one padded mega-batch.
 
@@ -1168,6 +1212,11 @@ def schedule_fleet(
         jobs across epochs (the online service) can build each job's
         tables once and skip the per-launch rebuild; passing ``None``
         builds them here. Results are bit-identical either way.
+      tracer: optional :class:`repro.obs.trace.Tracer`. Records a
+        ``schedule_fleet`` span enclosing per-stage device-dispatch
+        spans, plus ``fleet_solve`` (candidates / pruned / launches /
+        retraces) and ``portfolio_yields`` decision events. ``None``
+        (default) traces nothing and is bit-identical.
       (remaining arguments: see :func:`vectorized_search`.)
 
     Determinism / solo equivalence: with the same seed and parameters,
@@ -1202,23 +1251,26 @@ def schedule_fleet(
         raise ValueError("one seed pool (or None) per instance required")
     if op_tables is not None and len(op_tables) != len(instances):
         raise ValueError("one OpTables per instance required")
-    results, stats = _run_fleet(
-        instances,
-        max_enumerate=max_enumerate,
-        n_samples=n_samples,
-        seeds=seeds,
-        use_wireless=use_wireless,
-        batch_size=batch_size,
-        lb_prune=lb_prune,
-        use_kernel=use_kernel,
-        contention=contention,
-        refine_rounds=refine_rounds,
-        refine_pool=refine_pool,
-        strategies=strategies,
-        refine_patience=refine_patience,
-        seed_pools=seed_pools,
-        op_tables=op_tables,
-    )
+    tr = as_tracer(tracer)
+    with tr.span("schedule_fleet", n_instances=len(instances)):
+        results, stats = _run_fleet(
+            instances,
+            max_enumerate=max_enumerate,
+            n_samples=n_samples,
+            seeds=seeds,
+            use_wireless=use_wireless,
+            batch_size=batch_size,
+            lb_prune=lb_prune,
+            use_kernel=use_kernel,
+            contention=contention,
+            refine_rounds=refine_rounds,
+            refine_pool=refine_pool,
+            strategies=strategies,
+            refine_patience=refine_patience,
+            seed_pools=seed_pools,
+            op_tables=op_tables,
+            tracer=tr,
+        )
     return FleetResult(
         results=results,
         makespans=np.asarray([r.makespan for r in results]),

@@ -1,0 +1,43 @@
+"""Structured tracing and metrics export for the serving loop and solver.
+
+Public surface:
+
+* :class:`~repro.obs.trace.Tracer` / :class:`~repro.obs.trace.NullTracer`
+  — nested wall-time spans, typed decision events, per-job lifecycle
+  marks, counters/gauges/histograms.
+* :func:`~repro.obs.export.write_chrome_trace` /
+  :func:`~repro.obs.export.chrome_trace_events` — Chrome/Perfetto
+  ``trace_event`` JSON.
+* :func:`~repro.obs.export.prometheus_exposition` — Prometheus text
+  format of the metrics registry.
+* :mod:`repro.obs.report` — offline per-epoch / per-job analysis
+  (``tools/trace_report.py`` is its CLI).
+"""
+
+from repro.obs.export import (
+    chrome_trace_events,
+    prometheus_exposition,
+    write_chrome_trace,
+)
+from repro.obs.trace import (
+    NULL_TRACER,
+    Event,
+    JobMark,
+    NullTracer,
+    Span,
+    Tracer,
+    as_tracer,
+)
+
+__all__ = [
+    "Event",
+    "JobMark",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "as_tracer",
+    "chrome_trace_events",
+    "prometheus_exposition",
+    "write_chrome_trace",
+]

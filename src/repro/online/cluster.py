@@ -82,11 +82,13 @@ import numpy as np
 from repro.core.instance import CH_WIRED, ProblemInstance
 from repro.core.schedule import Schedule
 from repro.core.simulator import simulate
+from repro.obs.trace import as_tracer
 
 __all__ = [
     "ClusterTimeline",
     "OrderReplay",
     "ResidualView",
+    "channel_delay_attribution",
     "job_holds",
     "replay_commit_order",
     "reservation_backfill_safe",
@@ -130,9 +132,12 @@ class ClusterTimeline:
     Args:
       n_racks: M physical racks.
       n_wireless: |K| physical wireless subchannels.
+      tracer: optional :class:`repro.obs.trace.Tracer` receiving
+        compaction and audit-backlog events (``None`` = no tracing).
     """
 
-    def __init__(self, n_racks: int, n_wireless: int):
+    def __init__(self, n_racks: int, n_wireless: int, *, tracer=None):
+        self.tracer = as_tracer(tracer)
         if n_racks < 1:
             raise ValueError("cluster needs at least one rack")
         if n_wireless < 0:
@@ -427,6 +432,14 @@ class ClusterTimeline:
                 dropped += i
         self.n_compacted += dropped
         self.compact_frontier = max(self.compact_frontier, t)
+        if self.tracer.enabled:
+            self.tracer.event(
+                "timeline_compact",
+                t=t,
+                dropped=dropped,
+                retained=self.n_intervals,
+            )
+            self.tracer.count("intervals_compacted", dropped)
         return dropped
 
     # -- feasibility audit ---------------------------------------------------
@@ -448,6 +461,10 @@ class ClusterTimeline:
         """
         if full:
             self._audit_backlog.clear()
+            if self.tracer.enabled:
+                self.tracer.event(
+                    "timeline_audit", n_checked=self.n_intervals, full=True
+                )
             for label, ivs in self._indexes():
                 ordered = sorted(ivs)
                 for (s0, e0, j0), (s1, _e1, j1) in zip(ordered, ordered[1:]):
@@ -458,6 +475,9 @@ class ClusterTimeline:
                         )
             return
         backlog, self._audit_backlog = self._audit_backlog, []
+        if self.tracer.enabled and backlog:
+            self.tracer.event("timeline_audit", n_checked=len(backlog))
+            self.tracer.count("intervals_audited", len(backlog))
         for label, ivs, iv in backlog:
             pos = bisect.bisect_left(ivs, iv)
             s, e, j = iv
@@ -535,6 +555,35 @@ def wired_windows(
             s = t + float(sched.tstart[e])
             out.append((s, s + d))
     return out
+
+
+def channel_delay_attribution(
+    view: ResidualView, sched: Schedule, placed: Schedule
+) -> tuple[float, float]:
+    """Split one job's cross-job channel queueing by resource.
+
+    ``placed`` is ``sched`` after :meth:`ClusterTimeline.arbitrate`
+    gap-inserted its transfers around other jobs' committed windows;
+    arbitration keeps the task->rack and edge->channel decisions, so the
+    per-edge start-time slips ``placed.tstart - sched.tstart`` are
+    exactly the waiting the shared channels imposed. Returns
+    ``(wired_seconds, wireless_seconds)`` — the queueing attribution the
+    trace's job-completion marks carry (an uncontended commit returns
+    ``(0, 0)`` since arbitrate is the identity there).
+    """
+    if placed is sched or not view.inst.job.n_edges:
+        return 0.0, 0.0
+    wired = wireless = 0.0
+    for e in range(view.inst.job.n_edges):
+        d = float(placed.tstart[e]) - float(sched.tstart[e])
+        if d <= 0.0:
+            continue
+        c = int(placed.chan[e])
+        if c == CH_WIRED:
+            wired += d
+        elif c >= 2:
+            wireless += d
+    return wired, wireless
 
 
 def job_holds(

@@ -149,22 +149,31 @@ class StreamingSeries:
             for sk in self._sketches.values():
                 sk.add(x)
 
+    # Zero-sample semantics: every statistic of an empty stream is NaN,
+    # not 0.0 — a serve with no completions has *no* p99, and rendering
+    # it as 0 would read as "instant". Renderers (OnlineResult.summary,
+    # the Prometheus exposition) detect NaN and print "n/a" / omit the
+    # quantile lines instead.
+
     @property
     def mean(self) -> float:
-        return self._sum / self.count if self.count else 0.0
+        return self._sum / self.count if self.count else float("nan")
 
     @property
     def max(self) -> float:
-        return self._max if self.count else 0.0
+        return self._max if self.count else float("nan")
 
     @property
     def min(self) -> float:
-        return self._min if self.count else 0.0
+        return self._min if self.count else float("nan")
 
     def quantile(self, p: float) -> float:
-        """Estimated ``p``-quantile (exact while the buffer is alive)."""
+        """Estimated ``p``-quantile (exact while the buffer is alive).
+
+        NaN when no samples have been observed (see class note above).
+        """
         if not self.count:
-            return 0.0
+            return float("nan")
         if self._exact is not None:
             return float(np.percentile(self._exact, 100.0 * p))
         sketches = self._sketches
@@ -427,25 +436,33 @@ class OnlineResult:
     def queueing_delays(self) -> np.ndarray:
         return np.asarray([j.queueing_delay for j in self.jobs], dtype=np.float64)
 
+    # Empty-serve semantics mirror StreamingSeries: a result with no
+    # served jobs has NaN aggregates (there is no mean JCT of nothing),
+    # and summary() renders them as "n/a".
+
     @property
     def mean_jct(self) -> float:
         if self.jobs:
             return float(self.jcts.mean())
-        return self.jct_stats.mean if self.jct_stats is not None else 0.0
+        return self.jct_stats.mean if self.jct_stats is not None else float("nan")
 
     @property
     def p95_jct(self) -> float:
         if self.jobs:
             return float(np.percentile(self.jcts, 95))
-        if self.jct_stats is not None and self.jct_stats.count:
+        if self.jct_stats is not None:
             return self.jct_stats.quantile(0.95)
-        return 0.0
+        return float("nan")
 
     @property
     def mean_queueing_delay(self) -> float:
         if self.jobs:
             return float(self.queueing_delays.mean())
-        return self.queue_stats.mean if self.queue_stats is not None else 0.0
+        return (
+            self.queue_stats.mean
+            if self.queue_stats is not None
+            else float("nan")
+        )
 
     @property
     def makespan(self) -> float:
@@ -460,7 +477,9 @@ class OnlineResult:
     def _quantile(self, stats: StreamingSeries | None, values, p: float) -> float:
         if stats is not None and stats.count:
             return stats.quantile(p)
-        return float(np.percentile(values, 100.0 * p)) if len(values) else 0.0
+        if len(values):
+            return float(np.percentile(values, 100.0 * p))
+        return float("nan")
 
     @property
     def p50_queueing_delay(self) -> float:
@@ -500,7 +519,15 @@ class OnlineResult:
         return float("inf") if self.jobs else 0.0
 
     def summary(self) -> str:
-        """One-line human summary (used by the example and benchmarks)."""
+        """One-line human summary (used by the example and benchmarks).
+
+        NaN aggregates (empty serve: 0 arrivals or an all-rejected
+        stream) render as ``n/a`` rather than ``nan``/``0.0``.
+        """
+
+        def f1(v: float) -> str:
+            return f"{v:.1f}" if np.isfinite(v) else "n/a"
+
         jps = self.jobs_per_solver_second
         jps_s = f"{jps:.2f}" if np.isfinite(jps) else "inf"
         arb = (
@@ -541,12 +568,12 @@ class OnlineResult:
                 )
         return (
             f"policy={self.policy} warm={self.warm_start} jobs={self.n_jobs} "
-            f"mean_jct={self.mean_jct:.1f} p95_jct={self.p95_jct:.1f} "
-            f"mean_queue={self.mean_queueing_delay:.1f} "
-            f"queue_p50/p90/p99={self.p50_queueing_delay:.1f}/"
-            f"{self.p90_queueing_delay:.1f}/{self.p99_queueing_delay:.1f} "
-            f"jct_p50/p90/p99={self.p50_jct:.1f}/{self.p90_jct:.1f}/"
-            f"{self.p99_jct:.1f} "
+            f"mean_jct={f1(self.mean_jct)} p95_jct={f1(self.p95_jct)} "
+            f"mean_queue={f1(self.mean_queueing_delay)} "
+            f"queue_p50/p90/p99={f1(self.p50_queueing_delay)}/"
+            f"{f1(self.p90_queueing_delay)}/{f1(self.p99_queueing_delay)} "
+            f"jct_p50/p90/p99={f1(self.p50_jct)}/{f1(self.p90_jct)}/"
+            f"{f1(self.p99_jct)} "
             f"peak_active={self.peak_active} peak_queue={self.peak_queue_depth} "
             f"makespan={self.makespan:.1f} "
             f"util(rack/wired/wireless)="

@@ -107,11 +107,13 @@ from repro.core.vectorized import schedule_fleet
 from repro.online.cluster import (
     ClusterTimeline,
     ResidualView,
+    channel_delay_attribution,
     replay_commit_order,
     reservation_backfill_safe,
 )
 from repro.online.metrics import JobMetrics, OnlineResult, StreamingSeries
 from repro.online.workload import ArrivalEvent
+from repro.obs.trace import as_tracer
 
 __all__ = ["OnlineScheduler", "DEFAULT_SOLVER_KWARGS"]
 
@@ -479,6 +481,17 @@ class OnlineScheduler:
         job's *tier* tag, then 1.0) — a tenant with weight 2 is entitled
         to twice the attained service of a weight-1 tenant before
         ranking behind it. Unknown tags default to 1.0.
+      tracer: optional :class:`repro.obs.trace.Tracer`. When set, each
+        epoch records nested wall-time spans (``epoch`` →
+        ``collect_arrivals`` / ``plan_batch`` / ``arbitrate_and_commit``),
+        typed decision events at every admission / arbitration / backfill
+        branch, per-job lifecycle marks in simulated time, and the
+        metrics registry (``queue_depth`` / ``epoch_latency`` histograms,
+        ``prune_rate`` / per-tier ``slo_attainment`` gauges) — export via
+        :mod:`repro.obs.export`, analyze via ``tools/trace_report.py``.
+        The default ``None`` serves **bit-identically** through a no-op
+        tracer (locked by ``tests/test_obs.py``; the stress lane asserts
+        the traced overhead stays small).
     """
 
     def __init__(
@@ -508,6 +521,7 @@ class OnlineScheduler:
         admission_control: str = "none",
         max_overtakes: int | None = None,
         tenant_weights: dict | None = None,
+        tracer=None,
     ):
         if policy != "fleet" and policy not in ONLINE_BASELINES:
             raise ValueError(
@@ -579,6 +593,7 @@ class OnlineScheduler:
         self.admission_control = admission_control
         self.max_overtakes = None if max_overtakes is None else int(max_overtakes)
         self.tenant_weights = dict(tenant_weights) if tenant_weights else {}
+        self.tracer = as_tracer(tracer)
         # Overtake bookkeeping runs only when overtakes are possible and
         # observable — the default FIFO/unbounded path skips it entirely.
         self._track_overtakes = (
@@ -598,8 +613,13 @@ class OnlineScheduler:
         at a time.
         """
         stream = _ArrivalStream(arrivals)
+        tr = self.tracer
         st = _ServeState(
-            cluster=ClusterTimeline(self.n_racks, self.n_wireless),
+            cluster=ClusterTimeline(
+                self.n_racks,
+                self.n_wireless,
+                tracer=tr if tr.enabled else None,
+            ),
             free_r=_FreeSet(self.n_racks),
             free_w=_FreeSet(self.n_wireless),
             queue_stats=StreamingSeries(),
@@ -625,28 +645,68 @@ class OnlineScheduler:
                     "online event loop deadlocked: jobs queued with no "
                     "outstanding completion or arrival to wake on"
                 )
-            self._collect_arrivals(stream, st, t)
-            if self.admission_control != "none":
-                self._deadline_control(t, st)
-            st.counters["epochs"] += 1
-            plan = self._plan_batch(t, st)
-            t0 = _time.perf_counter() if st.epoch_latency is not None else 0.0
-            new_completions = self._arbitrate_and_commit(t, st, plan)
-            if st.epoch_latency is not None:
-                st.epoch_latency.append(_time.perf_counter() - t0)
-            for comp in new_completions:
-                heapq.heappush(st.completions, comp)
-            st.peak_active = max(st.peak_active, len(st.completions))
-            if (
-                self.compact_interval
-                and st.counters["epochs"] % self.compact_interval == 0
-            ):
-                st.cluster.compact(t)
+            k = st.counters["epochs"]
+            with tr.span("epoch", epoch=k, t=float(t)) as ep_sp:
+                with tr.span("collect_arrivals", epoch=k) as sp:
+                    self._collect_arrivals(stream, st, t)
+                    if tr.enabled:
+                        sp.set(n_pending=len(st.pending))
+                        tr.observe("queue_depth", len(st.pending))
+                if self.admission_control != "none":
+                    self._deadline_control(t, st)
+                st.counters["epochs"] += 1
+                with tr.span("plan_batch", epoch=k) as sp:
+                    plan = self._plan_batch(t, st)
+                    if tr.enabled:
+                        sp.set(n_admit=len(plan.admit) if plan else 0)
+                with tr.span("arbitrate_and_commit", epoch=k) as sp:
+                    t0 = (
+                        _time.perf_counter()
+                        if st.epoch_latency is not None and not tr.enabled
+                        else 0.0
+                    )
+                    new_completions = self._arbitrate_and_commit(t, st, plan)
+                    if st.epoch_latency is not None and not tr.enabled:
+                        st.epoch_latency.append(_time.perf_counter() - t0)
+                    if tr.enabled:
+                        sp.set(n_committed=len(new_completions))
+                # When traced, the commit latency IS the span duration, so
+                # the exported trace reconciles with epoch_commit_latency
+                # exactly instead of within span-entry overhead.
+                if tr.enabled and st.epoch_latency is not None:
+                    st.epoch_latency.append(sp.duration)
+                for comp in new_completions:
+                    heapq.heappush(st.completions, comp)
+                st.peak_active = max(st.peak_active, len(st.completions))
+                if (
+                    self.compact_interval
+                    and st.counters["epochs"] % self.compact_interval == 0
+                ):
+                    st.cluster.compact(t)
+            if tr.enabled:
+                tr.observe("epoch_latency", ep_sp.duration)
 
         st.cluster.assert_feasible()
         st.records.sort(key=lambda r: r.job_id)
         horizon = st.cluster.last_completion
         util = st.cluster.utilization(horizon)
+        if tr.enabled:
+            # End-of-serve registry snapshot for the Prometheus
+            # exposition: prune/SLO gauges, the streaming sketches by
+            # reference, and every serve counter.
+            tr.gauge(
+                "prune_rate",
+                st.counters["pruned"] / max(st.counters["candidates"], 1),
+            )
+            for tier, (met, tot) in sorted(st.tier_slo.items()):
+                if tot:
+                    tr.gauge("slo_attainment", met / tot, tier=tier)
+            tr.adopt_series("queueing_delay", st.queue_stats)
+            tr.adopt_series("jct", st.jct_stats)
+            for tenant, series in sorted(st.tenant_queue.items()):
+                tr.adopt_series("tenant_queueing_delay", series, tenant=tenant)
+            for name, v in st.counters.items():
+                tr.count(f"serve_{name}", float(v))
         return OnlineResult(
             jobs=st.records,
             policy=self.policy,
@@ -692,8 +752,20 @@ class OnlineScheduler:
     ) -> None:
         """Pull arrivals due at epoch ``t`` into the queue, retire due
         completions, and advance the free sets to ``t``."""
+        tr = self.tracer
         while not stream.exhausted and stream.peek_time() <= t:
-            st.pending.append(_PendingJob(stream.pop()))
+            ev = stream.pop()
+            st.pending.append(_PendingJob(ev))
+            if tr.enabled:
+                tr.job(
+                    ev.job_id,
+                    "arrival",
+                    ev.time,
+                    family=ev.family,
+                    tenant=ev.tenant,
+                    tier=ev.tier,
+                    deadline=ev.deadline,
+                )
         st.peak_queue = max(st.peak_queue, len(st.pending))
         while st.completions and st.completions[0] <= t:
             heapq.heappop(st.completions)
@@ -728,10 +800,27 @@ class OnlineScheduler:
                     doomed.append(p)
                 else:
                     p.hopeless = True
+                    if self.tracer.enabled:
+                        self.tracer.event(
+                            "deadline_hopeless",
+                            job_id=p.event.job_id,
+                            t=float(t),
+                            deadline=float(ddl),
+                            lower_bound=float(p.lb),
+                        )
         for p in doomed:
             st.pending.remove(p)
             st.counters["deadline_rejected"] += 1
             st.rejected_ids.append(p.event.job_id)
+            if self.tracer.enabled:
+                # The rejection proof: t + lower_bound(inst) > deadline.
+                self.tracer.event(
+                    "deadline_reject",
+                    job_id=p.event.job_id,
+                    t=float(t),
+                    deadline=float(p.event.deadline),
+                    lower_bound=float(p.lb),
+                )
 
     # -- stage 2: plan -------------------------------------------------------
 
@@ -792,6 +881,14 @@ class OnlineScheduler:
         cluster = st.cluster
         hol_need = None  # head-of-line protection bound for backfills
         queue = self._admission_queue(st)
+        if self.tracer.enabled and queue is not st.pending:
+            ordered = [p.event.job_id for p in queue]
+            if ordered != [p.event.job_id for p in st.pending]:
+                self.tracer.event(
+                    "admission_reorder",
+                    policy=self.admission,
+                    order=ordered,
+                )
         if self.policy in ("fifo_solo", "edf_solo"):
             # Solo rule: head-of-queue job only, and only on a fully idle
             # cluster (every rack free implies every channel free too —
@@ -948,6 +1045,7 @@ class OnlineScheduler:
             seed=seeds,
             seed_pools=seed_pools,
             op_tables=[p.tables() for p in batch],
+            tracer=self.tracer if self.tracer.enabled else None,
             **self.solver_kwargs,
         )
         st.counters["wall"] += _time.perf_counter() - t0
@@ -1019,9 +1117,14 @@ class OnlineScheduler:
         placed: Schedule,
         solver_mk: float,
         backfilled: bool,
+        solver_sched: Schedule | None = None,
     ) -> float:
         """Land one arbitrated schedule: timeline commit, free-set grants,
-        streaming stats, and (optionally) the per-job record."""
+        streaming stats, and (optionally) the per-job record.
+
+        ``solver_sched`` (fleet policy) is the pre-arbitration schedule;
+        traced serves diff it against ``placed`` to attribute the job's
+        cross-job channel queueing to wired vs wireless resources."""
         holds: list[tuple[str, int, float]] = []
         comp = st.cluster.commit(
             view, placed, t, job_id=p.event.job_id, holds_out=holds
@@ -1052,6 +1155,26 @@ class OnlineScheduler:
         if self.record_jobs:
             st.records.append(
                 self._record(p, view, t, comp, placed, solver_mk, backfilled)
+            )
+        tr = self.tracer
+        if tr.enabled:
+            qw, qwl = (
+                channel_delay_attribution(view, solver_sched, placed)
+                if solver_sched is not None
+                else (0.0, 0.0)
+            )
+            tr.job(ev.job_id, "admit", float(t), backfilled=bool(backfilled))
+            tr.job(
+                ev.job_id,
+                "complete",
+                float(comp),
+                makespan=float(placed.makespan),
+                solver_makespan=float(solver_mk),
+                queue_wired=qw,
+                queue_wireless=qwl,
+                n_racks=view.inst.n_racks,
+                n_wireless=view.inst.n_wireless,
+                backfilled=bool(backfilled),
             )
         return comp
 
@@ -1163,6 +1286,12 @@ class OnlineScheduler:
                     # needs past its reservation. It stays queued; its
                     # solve already fed the warm-start incumbents above.
                     st.counters["backfill_rejected"] += 1
+                    if self.tracer.enabled:
+                        self.tracer.event(
+                            "backfill_reject",
+                            job_id=p.event.job_id,
+                            completion=float(t + placed.makespan),
+                        )
                     continue
                 if self._should_defer(
                     p, t, t + float(placed.makespan), st, new_completions
@@ -1171,8 +1300,24 @@ class OnlineScheduler:
                     # commit now is a proven miss, so the job stays
                     # queued for a less contended epoch.
                     st.counters["deadline_deferrals"] += 1
+                    if self.tracer.enabled:
+                        self.tracer.event(
+                            "deadline_defer",
+                            job_id=p.event.job_id,
+                            completion=float(t + placed.makespan),
+                            deadline=float(p.event.deadline),
+                        )
                     continue
-                comp = self._commit_job(t, st, p, view, placed, serve_mks[i], bf)
+                if bf and self.tracer.enabled:
+                    self.tracer.event(
+                        "backfill_commit",
+                        job_id=p.event.job_id,
+                        completion=float(t + placed.makespan),
+                    )
+                comp = self._commit_job(
+                    t, st, p, view, placed, serve_mks[i], bf,
+                    solver_sched=serve_scheds[i],
+                )
                 new_completions.append(comp)
                 committed.append(p)
         else:
@@ -1204,12 +1349,31 @@ class OnlineScheduler:
                     cluster, view, t + placed.makespan, t, plan.hol_need
                 ):
                     st.counters["backfill_rejected"] += 1
+                    if self.tracer.enabled:
+                        self.tracer.event(
+                            "backfill_reject",
+                            job_id=p.event.job_id,
+                            completion=float(t + placed.makespan),
+                        )
                     continue
                 if self._should_defer(
                     p, t, t + float(placed.makespan), st, new_completions
                 ):
                     st.counters["deadline_deferrals"] += 1
+                    if self.tracer.enabled:
+                        self.tracer.event(
+                            "deadline_defer",
+                            job_id=p.event.job_id,
+                            completion=float(t + placed.makespan),
+                            deadline=float(p.event.deadline),
+                        )
                     continue
+                if bf and self.tracer.enabled:
+                    self.tracer.event(
+                        "backfill_commit",
+                        job_id=p.event.job_id,
+                        completion=float(t + placed.makespan),
+                    )
                 comp = self._commit_job(
                     t, st, p, view, placed, placed.makespan, bf
                 )
@@ -1320,6 +1484,14 @@ class OnlineScheduler:
         # Replayed total-JCT delta vs FIFO for this epoch (positive =
         # improvement; sigma commits its order even when negative).
         st.counters["arbitration_gain"] += fifo_obj[1] - chosen_obj[1]
+        if self.tracer.enabled:
+            self.tracer.event(
+                "arbitration_order",
+                policy=self.arbitration,
+                order=[plan.admit[i].event.job_id for i in chosen],
+                gain=float(fifo_obj[1] - chosen_obj[1]),
+                reordered=chosen != fifo,
+            )
         return chosen
 
     @staticmethod

@@ -378,8 +378,11 @@ def test_streaming_series_constant_stream_through_switch_is_exact():
 
 
 def test_streaming_series_empty_and_untracked():
+    # Zero-sample statistics are NaN (there is no quantile of nothing),
+    # never 0.0 — renderers turn NaN into "n/a" / omitted lines.
     s = StreamingSeries()
-    assert s.quantile(0.5) == 0.0 and s.mean == 0.0
+    for v in (s.quantile(0.5), s.mean, s.min, s.max):
+        assert np.isnan(v)
     for _ in range(200):
         s.push(1.0)
     with pytest.raises(KeyError, match="not tracked"):
@@ -486,7 +489,8 @@ def test_stress_lane_smoke_emits_stress_record():
 
     common.reset_results()
     try:
-        ratio = run_stress(n_jobs=300)
+        ratio, overhead = run_stress(n_jobs=300)
+        assert overhead is None  # untraced arm does not rerun the stream
         assert np.isfinite(ratio) and ratio > 0
         rec = common.RESULTS[-1]
         assert rec["kind"] == "stress"
@@ -497,5 +501,33 @@ def test_stress_lane_smoke_emits_stress_record():
                   "jct_p50", "jct_p90", "jct_p99",
                   "peak_active", "peak_queue", "intervals_compacted"):
             assert k in m
+    finally:
+        common.reset_results()
+
+
+def test_stress_lane_traced_arm_writes_perfetto_trace(tmp_path):
+    from benchmarks import common
+    from benchmarks.online_serving import run_stress
+    from repro.obs.report import (
+        commit_latency_total,
+        epoch_breakdown,
+        load_trace,
+    )
+
+    out = tmp_path / "stress_trace.json"
+    common.reset_results()
+    try:
+        ratio, overhead = run_stress(n_jobs=300, trace_out=str(out))
+        assert np.isfinite(ratio)
+        # Overhead is wall-clock noise at this scale; just require the
+        # traced serve actually ran and the record carries the fields.
+        assert overhead is not None and overhead > 0
+        m = common.RESULTS[-1]["metrics"]
+        assert m["tracer_overhead"] == pytest.approx(overhead, abs=5e-4)
+        assert "traced_wall_s" in m
+        trace = load_trace(out)
+        rows = epoch_breakdown(trace)
+        assert len(rows) == m["n_epochs"]
+        assert commit_latency_total(trace) > 0.0
     finally:
         common.reset_results()

@@ -1,0 +1,46 @@
+"""Offline trace analyzer: the debugging entry point for serving traces.
+
+Loads a Chrome/Perfetto trace written by
+``repro.obs.export.write_chrome_trace`` (e.g. by
+``benchmarks/online_serving.py --stress --trace out.json``) and prints:
+
+  1. the per-epoch latency breakdown (collect / plan / commit wall time);
+  2. the top-k slowest jobs with their queueing attribution — admission
+     queueing vs the ``makespan - solver_makespan`` cross-job channel
+     gap, split by wired/wireless resource;
+  3. optionally, the full decision audit trail for one job id
+     (``--job N``): every admission reorder, rejection proof, backfill
+     verdict, and arbitration order that touched it.
+
+Usage (from the repo root):
+
+    PYTHONPATH=src python tools/trace_report.py out.json [--top 10] [--job 42]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.obs.report import load_trace, render_report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Perfetto trace JSON written by --trace")
+    ap.add_argument(
+        "--top", type=int, default=5, help="slowest jobs to show (default 5)"
+    )
+    ap.add_argument(
+        "--job", type=int, default=None, help="print the decision audit for this job id"
+    )
+    args = ap.parse_args(argv)
+    print(render_report(load_trace(args.trace), top=args.top, job=args.job))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -32,6 +32,14 @@ comparisons that back the tables in ``docs/benchmarks.md``.
                           scale and exits non-zero when EDF misses more
                           deadlines than FIFO (the CI bench-lane
                           regression check).
+  run_topology_modes()  — reconfigurable-topology sweep: a static
+                          degree-limited transceiver configuration vs
+                          per-epoch demand-driven re-matching (with
+                          reconfiguration-delay accounting) vs matching
+                          under a seeded link-outage trace, across
+                          wireless-demand fractions; ``--topology
+                          --smoke`` gates all-ones bit-identity and
+                          matching >= static (the CI bench-lane check).
   run_stress()          — ``--stress``: sustained-throughput lane. Streams
                           a 100k-arrival production trace through the
                           O(active) serving core (lazy workload iterator,
@@ -490,6 +498,166 @@ def run_admission_slo(smoke: bool = False) -> bool:
     return edf_never_worse
 
 
+# Topology lane configuration: every rack transceiver holds one
+# subchannel link (degree 1), each subchannel accepts half the cluster
+# (channel_degree), and a reconfiguration takes TOPOLOGY_DELTA time
+# units on the affected subchannel. Wireless runs at 2x the wired rate
+# so the reachability mask actually binds the solver's channel choices.
+TOPOLOGY_DELTA = 1.0
+TOPOLOGY_WIRELESS_RATE = 2.0
+
+
+def run_topology_modes(smoke: bool = False) -> bool:
+    """Static vs per-epoch-matched vs outage-degraded reconfigurable
+    topology, across wireless-demand fractions.
+
+    All arms serve the identical production stream with the greedy-list
+    policy under a degree-limited transceiver model (each rack holds one
+    subchannel link, each subchannel accepts half the racks):
+
+    - ``static``  — the uniform-weight matching is configured once and
+      never changes; jobs granted racks outside their subchannel's rack
+      set fall back to wired.
+    - ``matching`` — the cluster re-matches every admission epoch against
+      the pending batch's aggregate wireless demand (idle subchannels
+      only; each reconfiguration charges a ``TOPOLOGY_DELTA`` busy
+      interval), so links follow the *free* racks.
+    - ``matching_outages`` — same, under a seeded link-flap trace; the
+      scheduler replans around dead links via the active-mask
+      fingerprint.
+
+    The wireless-demand axis is ``min_wireless_demand``: at 0 most jobs
+    are wired-only, at ``n_wireless`` every job wants the full
+    augmentation. Emits one ``kind="topology"`` record per (fraction,
+    seed, arm) plus per-fraction summaries. Returns ``True`` iff (a) a
+    ``topology="static"`` all-ones serve is bit-identical to the
+    topology-free serve on the smoke stream, and (b) per-epoch matching's
+    mean JCT is no worse than the static configuration's, averaged over
+    the smoke seeds (the ``--topology --smoke`` CI gate; ``smoke=True``
+    only shrinks the scale).
+    """
+    from repro.core.instance import Topology
+    from repro.online.workload import link_outage_trace
+
+    n_racks, n_wl = CLUSTER["n_racks"], CLUSTER["n_wireless"]
+    if smoke:
+        fractions, n_seeds, n_jobs = (n_wl,), 3, 10
+    elif not FULL:
+        fractions, n_seeds, n_jobs = (0, 1, n_wl), 4, 10
+    else:
+        fractions, n_seeds, n_jobs = (0, 1, n_wl), 8, 16
+    # Queue-building rate: fragmented free sets are where re-matching can
+    # follow the free racks and a frozen configuration cannot.
+    rate = 1 / 6
+    base = Topology(
+        reach=np.ones((n_racks, n_wl), dtype=bool),
+        degree=1,
+        channel_degree=max(1, n_racks // n_wl),
+        delta=TOPOLOGY_DELTA,
+    )
+    # The static arm freezes the uniform-weight matching of the same model.
+    static_topo = Topology(reach=base.match(np.ones(n_racks)))
+    horizon = 4.0 * n_jobs / rate
+
+    def _evs(seed: int, frac: int):
+        return production_arrivals(
+            seed,
+            rate=rate,
+            n_jobs=n_jobs,
+            n_racks=n_racks,
+            n_wireless=n_wl,
+            min_rack_demand=2,
+            min_wireless_demand=frac,
+            wireless_rate=TOPOLOGY_WIRELESS_RATE,
+        )
+
+    def _serve(evs, seed, **topo_kw):
+        return OnlineScheduler(
+            n_racks, n_wl, window=5.0, policy="greedy_list", seed=seed,
+            **topo_kw,
+        ).serve(evs)
+
+    # Gate (a): the all-ones static path is bit-identical to no topology.
+    evs0 = _evs(0, fractions[0])
+    plain = _serve(evs0, 0)
+    allones = _serve(
+        evs0, 0, topology="static",
+        cluster_topology=Topology.all_ones(n_racks, n_wl),
+    )
+    identical = (
+        plain.mean_jct == allones.mean_jct
+        and plain.makespan == allones.makespan
+    )
+    emit(
+        "online_topology_allones_identity",
+        0,
+        f"plain_jct={plain.mean_jct:.4f};allones_jct={allones.mean_jct:.4f}"
+        f";identical={identical}",
+        kind="topology",
+    )
+
+    matching_never_worse = True
+    arms = (
+        ("static", dict(topology="static", cluster_topology=static_topo)),
+        ("matching", dict(topology="matching", cluster_topology=base)),
+        ("matching_outages", dict(topology="matching", cluster_topology=base)),
+    )
+    for frac in fractions:
+        means = {tag: [] for tag, _ in arms}
+        means["free"] = []
+        reconfigs = flaps = 0
+        for seed in range(n_seeds):
+            evs = _evs(seed, frac)
+            outages = link_outage_trace(
+                seed, n_racks, n_wl, horizon,
+                outage_rate=0.002, mean_downtime=30.0,
+            )
+            per_arm = {}
+            t0 = time.perf_counter()
+            # Unrestricted reference: no mask at all (full reachability).
+            free = _serve(evs, seed)
+            means["free"].append(free.mean_jct)
+            for tag, kw in arms:
+                extra = dict(outages=outages) if tag.endswith("outages") else {}
+                res = _serve(evs, seed, **kw, **extra)
+                per_arm[tag] = res
+                means[tag].append(res.mean_jct)
+            wall = time.perf_counter() - t0
+            mt, st = per_arm["matching"], per_arm["static"]
+            reconfigs += mt.n_reconfigs
+            flaps += per_arm["matching_outages"].n_link_events
+            emit(
+                f"online_topology_wl{frac}_seed{seed}",
+                1e6 * wall / ((len(arms) + 1) * n_jobs),
+                f"free_jct={free.mean_jct:.1f}"
+                f";static_jct={st.mean_jct:.1f}"
+                f";matching_jct={mt.mean_jct:.1f}"
+                f";outages_jct={per_arm['matching_outages'].mean_jct:.1f}"
+                f";reconfigs={mt.n_reconfigs}"
+                f";outage_reconfigs={per_arm['matching_outages'].n_reconfigs}"
+                f";link_events={per_arm['matching_outages'].n_link_events}"
+                f";static_wireless_util={st.wireless_utilization:.2f}"
+                f";matching_wireless_util={mt.wireless_utilization:.2f}",
+                kind="topology",
+            )
+        mean_of = {tag: float(np.mean(v)) for tag, v in means.items()}
+        if mean_of["matching"] > mean_of["static"] + 1e-9:
+            matching_never_worse = False
+        emit(
+            f"online_topology_wl{frac}_summary",
+            0,
+            f"free_mean_jct={mean_of['free']:.2f}"
+            f";static_mean_jct={mean_of['static']:.2f}"
+            f";matching_mean_jct={mean_of['matching']:.2f}"
+            f";outages_mean_jct={mean_of['matching_outages']:.2f}"
+            f";matching_reduction="
+            f"{100 * (1 - mean_of['matching'] / mean_of['static']):.2f}%"
+            f";reconfigs={reconfigs};link_events={flaps}",
+            kind="topology",
+        )
+    return identical and matching_never_worse
+
+
 # Stress lane configuration: a throughput-oriented serving setup — the
 # greedy-list policy (per-job host heuristic, no engine launches) admits on
 # residual capacity with overtaking, the timeline compacts every
@@ -647,12 +815,40 @@ def main(argv=None):
         "admission under rates past saturation)",
     )
     parser.add_argument(
+        "--topology",
+        action="store_true",
+        help="run only the reconfigurable-topology sweep (static vs "
+        "per-epoch matching vs matching under link outages)",
+    )
+    parser.add_argument(
         "--smoke",
         action="store_true",
-        help="with --admission-slo: reduced-scale overload smoke that "
-        "exits non-zero when EDF misses more deadlines than FIFO",
+        help="with --admission-slo or --topology: reduced-scale smoke "
+        "that exits non-zero on a policy regression (EDF vs FIFO misses, "
+        "matching vs static JCT + all-ones bit-identity)",
     )
     args = parser.parse_args(argv)
+    if args.topology:
+        ok = run_topology_modes(smoke=args.smoke)
+        if args.json:
+            common.write_json(
+                args.json,
+                bench="online_serving_topology",
+                config={"smoke": args.smoke},
+            )
+        if args.smoke and not ok:
+            raise SystemExit(
+                "topology smoke FAILED: all-ones static path diverged "
+                "from the topology-free serve, or per-epoch matching's "
+                "mean JCT exceeded the static configuration's"
+            )
+        if args.smoke:
+            print(
+                "topology smoke passed: all-ones static is bit-identical "
+                "and matching mean JCT <= static at every smoke fraction",
+                flush=True,
+            )
+        return
     if args.admission_slo or args.smoke:
         ok = run_admission_slo(smoke=args.smoke)
         if args.json:
@@ -714,6 +910,7 @@ def main(argv=None):
     run_admission_modes()
     run_arbitration_modes()
     run_admission_slo()
+    run_topology_modes()
     if args.json:
         common.write_json(args.json, bench="online_serving")
 

@@ -174,6 +174,10 @@ def _g_list(
     chan = np.full(m, -1, dtype=np.int64)
     rack_tl = [_Timeline() for _ in range(inst.n_racks)]
     chan_ids = [CH_WIRED] + ([2 + k for k in range(inst.n_wireless)] if use_wireless else [])
+    # Wireless subchannel 2+k is a candidate for a cross-rack edge only when
+    # both endpoint racks reach k; wired (always reachable) backstops every
+    # pair, so the candidate list below is never empty.
+    reach = None if inst.topology is None else inst.topology.reach
     chan_tl = {c: _Timeline() for c in chan_ids}
     # Non-strict: channels this variant does not place on (e.g. wireless
     # under use_wireless=False) cannot conflict, so their intervals are
@@ -203,6 +207,12 @@ def _g_list(
                 else:
                     cbest = None
                     for c in chan_ids:
+                        if (
+                            reach is not None
+                            and c >= 2
+                            and not (reach[rack[u], c - 2] and reach[i, c - 2])
+                        ):
+                            continue
                         tl = _Timeline()
                         tl.busy = scratch[c]
                         s = tl.earliest_fit(finish[u], float(dur[e, c]))

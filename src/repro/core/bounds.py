@@ -34,6 +34,22 @@ max(critical_path, rack_load, network_work) is admissible both for exact
 B&B pruning and for the vectorized stage-1 pruner
 (:func:`repro.core.vectorized.batched_lower_bound`, fused on-device via
 :func:`repro.kernels.ops.batched_combined_lb`).
+
+Reachability-aware terms (restricted :class:`~repro.core.instance.Topology`)
+---------------------------------------------------------------------------
+Under a restricted reachability mask two sharpenings apply, both still
+admissible (``topology=None`` takes the exact pre-topology code path,
+bit-identical):
+
+  * forced-wired edges — a cross-rack edge whose endpoint racks share no
+    reachable subchannel must use the wired channel, so its optimistic
+    duration is q (not min(q, q̌)) and the wired channel alone must carry
+    Σ q over forced edges: makespan >= that serial load.
+  * active-subchannel counting — the aggregate channel work only divides
+    by subchannels some cross edge of THIS assignment can actually reach
+    (1 + |K_active|), so unreachable subchannels no longer dilute the
+    bound ("a subchannel's aggregate work only counts racks that can
+    reach it").
 """
 
 from __future__ import annotations
@@ -133,14 +149,32 @@ def network_work_bounds(inst: ProblemInstance, racks: np.ndarray) -> np.ndarray:
 
     Σ over cross-rack edges of min(q, q̌), divided by the 1 + |K| network
     channels (wired ``b`` + wireless subchannels). float64[B].
+
+    With a restricted ``inst.topology`` the bound sharpens (still
+    admissible): forced-wired edges (no common reachable subchannel)
+    contribute q and must serialize on the wired channel, and the
+    aggregate divides by 1 + |K_active| — only subchannels some cross
+    edge of the row's assignment can reach.
     """
     racks = np.asarray(racks)
     job = inst.job
     if job.n_edges == 0:
         return np.zeros(racks.shape[0], dtype=np.float64)
     net = min_network_durations(inst)
-    cross = racks[:, job.edges[:, 0]] != racks[:, job.edges[:, 1]]
-    return (cross * net[None, :]).sum(axis=1) / (1 + inst.n_wireless)
+    eu, ev = job.edges[:, 0], job.edges[:, 1]
+    cross = racks[:, eu] != racks[:, ev]
+    topo = inst.topology
+    if topo is None:
+        return (cross * net[None, :]).sum(axis=1) / (1 + inst.n_wireless)
+    q = np.asarray(inst.q_wired)
+    # [B, E, K]: subchannels usable by each row's placement of each edge.
+    edge_reach = topo.pair_reach()[racks[:, eu], racks[:, ev], :]
+    ok = edge_reach.any(axis=2)  # [B, E] pair shares >= 1 subchannel
+    minfeas = np.where(ok, net[None, :], q[None, :])
+    k_active = (edge_reach & cross[:, :, None]).any(axis=1).sum(axis=1)
+    agg = (cross * minfeas).sum(axis=1) / (1 + k_active)
+    wired_forced = (cross * ~ok * q[None, :]).sum(axis=1)
+    return np.maximum(agg, wired_forced)
 
 
 def contention_lower_bounds(inst: ProblemInstance, racks: np.ndarray) -> np.ndarray:
@@ -183,10 +217,20 @@ def partial_assignment_bound(
     job = inst.job
     cost = min_cost.copy()
     net = min_network_durations(inst)
+    q = np.asarray(inst.q_wired)
+    conn = None
+    topology = inst.topology
+    if topology is not None:
+        conn = topology.pair_connected()
     for e in range(job.n_edges):
         u, v = int(job.edges[e, 0]), int(job.edges[e, 1])
         if rack[u] >= 0 and rack[v] >= 0:
-            cost[e] = inst.r_local[e] if rack[u] == rack[v] else net[e]
+            if rack[u] == rack[v]:
+                cost[e] = inst.r_local[e]
+            elif conn is None or conn[rack[u], rack[v]]:
+                cost[e] = net[e]
+            else:
+                cost[e] = q[e]  # forced wired: no common subchannel
     dist = critical_path_dist(job.n_tasks, job.edges, job.p, cost, topo)
     lb = float(np.max(dist + job.p))
     for i in range(inst.n_racks):
@@ -196,10 +240,25 @@ def partial_assignment_bound(
             if load > lb:
                 lb = load
     work = 0.0
+    wired_forced = 0.0
+    k_active: set[int] | None = None if topology is None else set()
     for e in range(job.n_edges):
         u, v = int(job.edges[e, 0]), int(job.edges[e, 1])
         if rack[u] >= 0 and rack[v] >= 0 and rack[u] != rack[v]:
-            work += net[e]
+            if conn is None or conn[rack[u], rack[v]]:
+                work += net[e]
+                if k_active is not None:
+                    k_active.update(
+                        topology.edge_channels(int(rack[u]), int(rack[v]))
+                    )
+            else:
+                work += q[e]
+                wired_forced += q[e]
     if work > 0.0:
-        lb = max(lb, work / (1 + inst.n_wireless))
+        n_chan = (
+            1 + inst.n_wireless if k_active is None else 1 + len(k_active)
+        )
+        lb = max(lb, work / n_chan)
+    if wired_forced > 0.0:
+        lb = max(lb, wired_forced)
     return lb

@@ -333,6 +333,10 @@ def simulate(
 
     dur_matrix = inst.durations_matrix()
     tables = build_op_tables(inst)
+    # Reachability gating: with a restricted topology a cross-rack edge may
+    # only use subchannels BOTH endpoint racks reach (None = all-ones mask,
+    # the paper's model — the loop below is untouched).
+    reach = None if inst.topology is None else inst.topology.reach
 
     # Resolve forced channels from locality.
     same = rack[job.edges[:, 0]] == rack[job.edges[:, 1]] if m else np.zeros(0, bool)
@@ -411,7 +415,15 @@ def simulate(
                 # Earliest-finish channel among permitted ones.
                 cands = [CH_WIRED]
                 if use_wireless:
-                    cands += [2 + k for k in range(inst.n_wireless)]
+                    if reach is None:
+                        cands += [2 + k for k in range(inst.n_wireless)]
+                    else:
+                        ru, rv = int(rack[u]), int(rack[v])
+                        cands += [
+                            2 + k
+                            for k in range(inst.n_wireless)
+                            if reach[ru, k] and reach[rv, k]
+                        ]
                 best = None
                 for cc in cands:
                     d = float(dur_matrix[e, cc])
@@ -427,6 +439,13 @@ def simulate(
                 d = float(dur_matrix[e, CH_LOCAL])
                 s = ready_t
             else:
+                if reach is not None and c >= 2:
+                    ru, rv = int(rack[u]), int(rack[v])
+                    if not (reach[ru, c - 2] and reach[rv, c - 2]):
+                        raise ValueError(
+                            f"edge {e} assigned subchannel {c - 2} "
+                            f"unreachable from racks ({ru}, {rv})"
+                        )
                 d = float(dur_matrix[e, c])
                 s = chan_tl[c].earliest_fit(ready_t, d)
                 chan_tl[c].insert(s, d)

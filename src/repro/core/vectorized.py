@@ -201,6 +201,9 @@ def _scan_evaluate(
                 #                  the sentinel id m_pad always reads 0.0
     chan_free0,  # f32[I, n_chan]  initial channel availability: 0 = usable,
                 #                  +inf = masked (instance has fewer channels)
+    reach,      # f32[I, M_pad, n_chan] topology reachability: 1 = rack may
+                #                  use the channel (col 0, wired, always 1);
+                #                  all-ones when the instance has no topology
     *,
     m_pad: int,
     M_pad: int,
@@ -212,6 +215,9 @@ def _scan_evaluate(
 
     def take(t):
         return jnp.take(t, inst_id, axis=0)
+
+    # Per-row reachability rows; constant over the scan.
+    reach_b = take(reach)  # [B, M_pad, n_chan]
 
     # Per-row tables, scan axis leading. Rows of different instances walk
     # different op sequences in lock-step; OP_PAD rows are no-ops.
@@ -254,7 +260,14 @@ def _scan_evaluate(
             axis=1,
         )
         s = jnp.maximum(ready_e[:, None], chan_free)
-        f = s + durs
+        # Topology gating: a channel is usable iff both endpoint racks reach
+        # it (col 0, wired, is always reachable); infeasible channels sit at
+        # +inf exactly like instance-masked channels.
+        def chan_rows(idx):  # rack ids [B] -> reach rows [B, n_chan]
+            return jnp.take_along_axis(reach_b, idx[:, None, None], axis=1)[:, 0, :]
+
+        feas = chan_rows(pick(rack, u)) * chan_rows(pick(rack, v))
+        f = jnp.where(feas > 0, s + durs, jnp.inf)
         best = jnp.argmin(f, axis=1)
         fin_net = jnp.take_along_axis(f, best[:, None], axis=1)[:, 0]
         new_free = jnp.where(
@@ -308,7 +321,7 @@ def _compiled_evaluator(n_dev: int, m_pad: int, M_pad: int, n_chan: int):
         core,
         mesh=mesh,
         in_specs=(P("b", None), P("b"), r2, r2, r2, r2, r2, r2, r2, r2, r2,
-                  r3, r2),
+                  r3, r2, r3),
         out_specs=P("b"),
         check_rep=False,
     )
@@ -331,6 +344,7 @@ def _build_eval_stack(instances, dims: _FleetDims, use_wireless: bool, op_tables
         "op_in": np.zeros((I, dims.n_ops, dims.indeg_pad), np.int32),
     }
     chan_free0 = np.full((I, dims.n_chan), np.inf, np.float32)
+    reach = np.ones((I, dims.M_pad, dims.n_chan), np.float32)
     for i, inst in enumerate(instances):
         t = pad_op_tables(
             inst,
@@ -343,8 +357,11 @@ def _build_eval_stack(instances, dims: _FleetDims, use_wireless: bool, op_tables
             fields[name][i] = getattr(t, name)
         n_ch = 1 + (inst.n_wireless if use_wireless else 0)
         chan_free0[i, :n_ch] = 0.0
+        if inst.topology is not None and n_ch > 1:
+            reach[i, : inst.n_racks, 1:n_ch] = inst.topology.reach
     return tuple(jnp.asarray(fields[name]) for name in fields) + (
         jnp.asarray(chan_free0),
+        jnp.asarray(reach),
     )
 
 
@@ -387,6 +404,14 @@ def _build_lb_arrays(instances, dims: _FleetDims):
     Padded edges carry -inf costs (their scatter into the max-plus adjacency
     is a no-op) and zero ``net_work`` (they add nothing to the aggregate
     channel-work term); padded tasks carry zero duration.
+
+    When any instance carries a :class:`~repro.core.instance.Topology`, two
+    extra arrays feed the matching-feasibility mask of the fused kernel:
+    ``pair_ok[I, M_pad, M_pad]`` (1 = the rack pair shares at least one
+    reachable subchannel; all-ones for topology-free instances) and
+    ``uplift[I, m_pad]`` (the forced-wired uplift ``q - min(q, q̌)`` per
+    edge, 0 on padding). Topology-free fleets omit them, so the compiled
+    stage-1 program is byte-for-byte the pre-topology one.
     """
     I = len(instances)
     src = np.zeros((I, dims.m_pad), np.int32)
@@ -397,6 +422,9 @@ def _build_lb_arrays(instances, dims: _FleetDims):
     net_work = np.zeros((I, dims.m_pad), np.float32)
     p_task = np.zeros((I, dims.n_pad), np.float32)
     chan_div = np.ones(I, np.float32)
+    topo_on = any(inst.topology is not None for inst in instances)
+    pair_ok = np.ones((I, dims.M_pad, dims.M_pad), np.float32) if topo_on else None
+    uplift = np.zeros((I, dims.m_pad), np.float32) if topo_on else None
     for i, inst in enumerate(instances):
         job = inst.job
         m = job.n_edges
@@ -410,10 +438,15 @@ def _build_lb_arrays(instances, dims: _FleetDims):
             net = bounds_mod.min_network_durations(inst)
             c_net[i, :m] = net
             net_work[i, :m] = net
-    return tuple(
-        jnp.asarray(a)
-        for a in (src, dst, p_src, c_local, c_net, net_work, p_task, chan_div)
-    )
+            if topo_on:
+                uplift[i, :m] = np.asarray(inst.q_wired, np.float32) - net
+        if topo_on and inst.topology is not None:
+            M = inst.n_racks
+            pair_ok[i, :M, :M] = inst.topology.pair_connected()
+    out = (src, dst, p_src, c_local, c_net, net_work, p_task, chan_div)
+    if topo_on:
+        out = out + (pair_ok, uplift)
+    return tuple(jnp.asarray(a) for a in out)
 
 
 @functools.partial(
@@ -430,6 +463,9 @@ def _fleet_lb_device(
     net_work,   # f32[I, m_pad]  min network duration (0 on padding)
     p_task,     # f32[I, n_pad]  task durations (0 on padding)
     chan_div,   # f32[I]         1 + |K| network channels
+    pair_ok=None,  # f32[I, M_pad, M_pad] 1 = rack pair shares a reachable
+                #                  subchannel (omitted: no topology in fleet)
+    uplift=None,   # f32[I, m_pad]  forced-wired uplift q - min(q, q̌)
     *,
     M_pad: int,
     n_iters: int,
@@ -442,6 +478,13 @@ def _fleet_lb_device(
     p_u + min(q, q̌) depending on co-location), accumulates the contention
     terms, and hands both to the fused Pallas kernel
     :func:`repro.kernels.ops.batched_combined_lb`.
+
+    With ``pair_ok``/``uplift`` present, cross edges whose rack pair shares
+    no reachable subchannel are charged the wired uplift through the
+    kernel's matching-feasibility mask, and the contention side gains the
+    serial forced-wired load term (all such edges traverse the single wired
+    channel). Both terms stay admissible: any feasible schedule must pay
+    ``q`` on forced edges.
     """
     global LB_TRACE_COUNT
     LB_TRACE_COUNT += 1
@@ -452,15 +495,36 @@ def _fleet_lb_device(
         return jnp.take(t, inst_id, axis=0)
 
     src_b, dst_b = take(src), take(dst)
-    same = jnp.take_along_axis(racks, src_b, axis=1) == jnp.take_along_axis(
-        racks, dst_b, axis=1
-    )
+    ru = jnp.take_along_axis(racks, src_b, axis=1)
+    rv = jnp.take_along_axis(racks, dst_b, axis=1)
+    same = ru == rv
     cost = jnp.where(same, take(c_local), take(c_net)) + take(p_src)
     # Batched static-index scatter: padded edges all write -inf at (0, 0),
     # which no real edge can occupy (self-loops are rejected by DagJob).
     w = jnp.full((B, n_pad, n_pad), -jnp.inf, jnp.float32)
     w = w.at[jnp.arange(B)[:, None], src_b, dst_b].set(cost)
     p_b = take(p_task)
+
+    if pair_ok is not None:
+        # Per-edge pair connectivity under each candidate's rack choice.
+        pk = take(pair_ok)  # [B, M_pad, M_pad]
+        ok = (
+            jnp.take_along_axis(
+                jnp.take_along_axis(pk, ru[:, :, None], axis=1),
+                rv[:, :, None],
+                axis=2,
+            )[..., 0]
+            > 0.5
+        )
+        # Additive matching-feasibility mask for the kernel: 0 on feasible
+        # edges, the wired uplift on forced ones (same scatter as ``w``, so
+        # parallel edges pair cost and uplift consistently).
+        up = jnp.where(same | ok, 0.0, take(uplift))
+        mask = jnp.zeros((B, n_pad, n_pad), jnp.float32)
+        mask = mask.at[jnp.arange(B)[:, None], src_b, dst_b].set(up)
+    else:
+        ok = None
+        mask = None
 
     if contention:
         # §IV-A contention terms, accumulated in a fixed sequential order so
@@ -480,20 +544,49 @@ def _fleet_lb_device(
 
         nw = take(net_work)
 
-        def work_body(e, acc):
-            ne = jax.lax.dynamic_index_in_dim(nw, e, axis=1, keepdims=False)
-            se = jax.lax.dynamic_index_in_dim(same, e, axis=1, keepdims=False)
-            return acc + jnp.where(se, 0.0, ne)
+        if ok is None:
 
-        work = jax.lax.fori_loop(0, m_pad, work_body, jnp.zeros((B,), jnp.float32))
-        extra = jnp.maximum(lb_load, work / take(chan_div))
+            def work_body(e, acc):
+                ne = jax.lax.dynamic_index_in_dim(nw, e, axis=1, keepdims=False)
+                se = jax.lax.dynamic_index_in_dim(same, e, axis=1, keepdims=False)
+                return acc + jnp.where(se, 0.0, ne)
+
+            work = jax.lax.fori_loop(
+                0, m_pad, work_body, jnp.zeros((B,), jnp.float32)
+            )
+            extra = jnp.maximum(lb_load, work / take(chan_div))
+        else:
+            # Forced cross edges pay the full wired duration in the
+            # aggregate-work term and, being confined to the single wired
+            # channel, also a serial forced-wired load bound.
+            nw_eff = nw + jnp.where(ok, 0.0, take(uplift))
+
+            def work_body_topo(e, acc):
+                work, forced = acc
+                ne = jax.lax.dynamic_index_in_dim(
+                    nw_eff, e, axis=1, keepdims=False
+                )
+                se = jax.lax.dynamic_index_in_dim(same, e, axis=1, keepdims=False)
+                oke = jax.lax.dynamic_index_in_dim(ok, e, axis=1, keepdims=False)
+                return (
+                    work + jnp.where(se, 0.0, ne),
+                    forced + jnp.where(se | oke, 0.0, ne),
+                )
+
+            zero = jnp.zeros((B,), jnp.float32)
+            work, forced = jax.lax.fori_loop(
+                0, m_pad, work_body_topo, (zero, zero)
+            )
+            extra = jnp.maximum(
+                jnp.maximum(lb_load, work / take(chan_div)), forced
+            )
     else:
         extra = jnp.full((B,), -jnp.inf, jnp.float32)
 
     from repro.kernels import ops as kops
 
     return kops.batched_combined_lb(
-        w, p_b, extra, block_b=min(block_b, B), n_iters=n_iters
+        w, p_b, extra, mask=mask, block_b=min(block_b, B), n_iters=n_iters
     )
 
 
@@ -556,10 +649,18 @@ def batched_lower_bound(
     netc = jnp.asarray(net, dtype=jnp.float32)
     src = jnp.asarray(job.edges[:, 0].astype(np.int32))
     dst = jnp.asarray(job.edges[:, 1].astype(np.int32))
+    topo = inst.topology
+    conn = None if topo is None else jnp.asarray(topo.pair_connected())
+    q_wired = jnp.asarray(inst.q_wired, dtype=jnp.float32)
 
     @jax.jit
     def lb(rk: jax.Array) -> jax.Array:
-        cost = jnp.where(rk[:, src] == rk[:, dst], r, netc)
+        if conn is None:
+            netc_eff = netc
+        else:
+            # Forced-wired edges (rack pair shares no subchannel) pay q.
+            netc_eff = jnp.where(conn[rk[:, src], rk[:, dst]], netc, q_wired)
+        cost = jnp.where(rk[:, src] == rk[:, dst], r, netc_eff)
         dist = jnp.zeros((rk.shape[0], n), dtype=jnp.float32)
 
         def body(_, dist):

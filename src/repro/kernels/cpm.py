@@ -98,11 +98,25 @@ def _lb_kernel(w_ref, p_ref, x_ref, o_ref, *, n: int, bb: int, n_iters: int):
     o_ref[...] = jnp.maximum(lb, x_ref[...])
 
 
+def _lb_kernel_masked(
+    w_ref, p_ref, x_ref, m_ref, o_ref, *, n: int, bb: int, n_iters: int
+):
+    # Matching-feasibility mask, additive form: m[u, v] = 0 where the
+    # optimistic (wireless-augmented) edge cost in w is reachable under the
+    # topology, = the wired-minus-wireless cost uplift where it is not.
+    # Adding before relaxation keeps -inf (no edge) at -inf and raises
+    # infeasible network edges to their forced-wired cost.
+    dist = _relax(w_ref[...] + m_ref[...], bb, n, n_iters)
+    lb = jnp.max(dist + p_ref[...], axis=1, keepdims=True)  # [bb, 1]
+    o_ref[...] = jnp.maximum(lb, x_ref[...])
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "n_iters", "interpret"))
 def batched_combined_lb(
     w: jax.Array,      # [B, n, n] float32 max-plus adjacency (-inf = no edge)
     p: jax.Array,      # [B, n] float32 per-row task durations (0 on padding)
     extra: jax.Array,  # [B] or [B, 1] float32 contention bound (-inf to disable)
+    mask: jax.Array | None = None,  # [B, n, n] float32 feasibility uplift
     block_b: int = 8,
     n_iters: int | None = None,
     interpret: bool = False,
@@ -114,6 +128,14 @@ def batched_combined_lb(
     adds the sink task duration (max_v dist[v] + p[v]) and maxes in the
     per-row ``extra`` contention terms, so one kernel launch emits the final
     admissible bound. ``n_iters`` as in :func:`batched_critical_path`.
+
+    ``mask`` is the topology layer's matching-feasibility mask in additive
+    form: 0 where the row's placement of edge (u, v) can reach a common
+    wireless subchannel (w's optimistic cost stands), and the non-negative
+    forced-wired cost uplift (q - min(q, q̌)) where it cannot — the kernel
+    relaxes over ``w + mask``, so infeasible picks are priced at the wired
+    channel before the bound is taken. ``mask=None`` (all topologies
+    unrestricted) compiles the exact pre-topology kernel, bit-identical.
     """
     B, n, _ = w.shape
     if n_iters is None:
@@ -125,20 +147,41 @@ def batched_combined_lb(
     p = p.astype(jnp.float32)
     extra = jnp.asarray(extra, jnp.float32).reshape(B, 1)
     extra = jnp.where(jnp.isfinite(extra), extra, NEG_INF)
+    if mask is not None:
+        mask = jnp.asarray(mask, jnp.float32)
     if pad:
         w = jnp.concatenate([w, jnp.full((pad, n, n), NEG_INF, jnp.float32)], 0)
         p = jnp.concatenate([p, jnp.zeros((pad, n), jnp.float32)], 0)
         extra = jnp.concatenate([extra, jnp.full((pad, 1), NEG_INF, jnp.float32)], 0)
-    out = pl.pallas_call(
-        functools.partial(_lb_kernel, n=n, bb=bb, n_iters=n_iters),
-        grid=((B + pad) // bb,),
-        in_specs=[
-            pl.BlockSpec((bb, n, n), lambda b: (b, 0, 0)),
-            pl.BlockSpec((bb, n), lambda b: (b, 0)),
-            pl.BlockSpec((bb, 1), lambda b: (b, 0)),
-        ],
-        out_specs=pl.BlockSpec((bb, 1), lambda b: (b, 0)),
-        out_shape=jax.ShapeDtypeStruct((B + pad, 1), jnp.float32),
-        interpret=interpret,
-    )(w, p, extra)
+        if mask is not None:
+            mask = jnp.concatenate(
+                [mask, jnp.zeros((pad, n, n), jnp.float32)], 0
+            )
+    if mask is None:
+        out = pl.pallas_call(
+            functools.partial(_lb_kernel, n=n, bb=bb, n_iters=n_iters),
+            grid=((B + pad) // bb,),
+            in_specs=[
+                pl.BlockSpec((bb, n, n), lambda b: (b, 0, 0)),
+                pl.BlockSpec((bb, n), lambda b: (b, 0)),
+                pl.BlockSpec((bb, 1), lambda b: (b, 0)),
+            ],
+            out_specs=pl.BlockSpec((bb, 1), lambda b: (b, 0)),
+            out_shape=jax.ShapeDtypeStruct((B + pad, 1), jnp.float32),
+            interpret=interpret,
+        )(w, p, extra)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_lb_kernel_masked, n=n, bb=bb, n_iters=n_iters),
+            grid=((B + pad) // bb,),
+            in_specs=[
+                pl.BlockSpec((bb, n, n), lambda b: (b, 0, 0)),
+                pl.BlockSpec((bb, n), lambda b: (b, 0)),
+                pl.BlockSpec((bb, 1), lambda b: (b, 0)),
+                pl.BlockSpec((bb, n, n), lambda b: (b, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bb, 1), lambda b: (b, 0)),
+            out_shape=jax.ShapeDtypeStruct((B + pad, 1), jnp.float32),
+            interpret=interpret,
+        )(w, p, extra, mask)
     return out[:B, 0]

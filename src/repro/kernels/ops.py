@@ -58,7 +58,8 @@ def batched_critical_path(w, block_b=8, n_iters=None):
     return _cpm(w, block_b=block_b, n_iters=n_iters, interpret=_interpret())
 
 
-def batched_combined_lb(w, p, extra, block_b=8, n_iters=None):
+def batched_combined_lb(w, p, extra, mask=None, block_b=8, n_iters=None):
     return _combined_lb(
-        w, p, extra, block_b=block_b, n_iters=n_iters, interpret=_interpret()
+        w, p, extra, mask=mask, block_b=block_b, n_iters=n_iters,
+        interpret=_interpret(),
     )

@@ -73,12 +73,20 @@ def ref_combined_lb(
     w: np.ndarray,      # [B, n, n] max-plus adjacency (-inf = no edge)
     p: np.ndarray,      # [B, n] per-row task durations (0 on padding)
     extra: np.ndarray,  # [B] contention bound terms (-inf to disable)
+    mask: np.ndarray | None = None,  # [B, n, n] feasibility uplift (>= 0)
 ) -> np.ndarray:
     """Oracle for the fused §IV-A combined stage-1 bound kernel.
 
     lb[b] = max(max_v dist[b, v] + p[b, v], extra[b]); all-padding rows
-    (no edges, zero durations, -inf extra) yield exactly 0.
+    (no edges, zero durations, -inf extra) yield exactly 0. ``mask`` is
+    the additive matching-feasibility mask: the longest path is taken
+    over ``w + mask`` (0 where the optimistic network cost is reachable,
+    the forced-wired uplift where the topology forbids it); -inf no-edge
+    entries stay no-edges.
     """
+    w = np.asarray(w, dtype=np.float64)
+    if mask is not None:
+        w = np.where(np.isfinite(w), w + np.asarray(mask, np.float64), w)
     dist = ref_critical_path(w).astype(np.float64)
     p = np.asarray(p, dtype=np.float64)
     extra = np.asarray(extra, dtype=np.float64).reshape(-1)

@@ -25,6 +25,7 @@ __all__ = [
     "job_table",
     "load_trace",
     "render_report",
+    "report_dict",
 ]
 
 # The three stage spans every epoch nests (see OnlineScheduler.serve).
@@ -150,6 +151,25 @@ def decision_audit(trace: dict, job_id: int) -> "list[dict]":
                 rows.append({"t": e["ts"] / 1e6, "kind": e["name"], "args": args})
     rows.sort(key=lambda r: r["t"])
     return rows
+
+
+def report_dict(
+    trace: dict, top: int = 5, job: "int | None" = None
+) -> dict:
+    """The report as one JSON-serializable dict (machine-readable twin of
+    :func:`render_report` — same per-epoch breakdown and top-k slow jobs,
+    plus the commit-latency total; ``decision_audit`` rows when ``job`` is
+    given). Keys: ``epochs``, ``commit_latency_s``, ``slow_jobs``, and
+    optionally ``audit`` = ``{"job_id", "events"}``.
+    """
+    out: dict = {
+        "epochs": epoch_breakdown(trace),
+        "commit_latency_s": commit_latency_total(trace),
+        "slow_jobs": job_table(trace, top=top),
+    }
+    if job is not None:
+        out["audit"] = {"job_id": job, "events": decision_audit(trace, job)}
+    return out
 
 
 def _fmt_ms(seconds: float) -> str:

@@ -62,6 +62,22 @@ cross-job wired traffic, the online service still reduces bit-for-bit to
 one ``schedule_fleet`` call (locked by ``tests/test_online.py::
 test_degenerate_arrivals_match_schedule_fleet``).
 
+Reconfigurable topology: constructed with a cluster-level
+:class:`~repro.core.instance.Topology`, the timeline additionally tracks
+**which wireless links are configured** (``matching``, a per-epoch greedy
+weighted b-matching over the topology's candidate links; see
+:meth:`ClusterTimeline.reconfigure`) and **which are physically up**
+(``link_state``, flipped by seeded outage traces via
+:meth:`ClusterTimeline.set_link`). Residual views then carry the induced
+:class:`~repro.core.instance.Topology` on their granted racks ×
+subchannels, so every solver stage — bounds, kernels, simulator —
+respects the active links. Reconfiguring a subchannel charges the
+topology's δ as a busy interval (owner id ``RECONFIG_JOB``) on that
+subchannel, audited by :meth:`assert_feasible` like any transfer; only
+subchannels idle at the epoch are ever reconfigured, links mid-transfer
+are pinned. With ``topology=None`` (default) all of this is inert and the
+timeline is bit-identical to the pre-topology code.
+
 Float semantics: holds are recorded at exact float completion times and
 ``free_racks`` / ``free_wireless`` use an exact ``hold <= t`` comparison —
 a resource released at exactly ``t`` is re-grantable at ``t``, while an
@@ -79,7 +95,7 @@ import operator
 
 import numpy as np
 
-from repro.core.instance import CH_WIRED, ProblemInstance
+from repro.core.instance import CH_WIRED, ProblemInstance, Topology
 from repro.core.schedule import Schedule
 from repro.core.simulator import simulate
 from repro.obs.trace import as_tracer
@@ -87,6 +103,7 @@ from repro.obs.trace import as_tracer
 __all__ = [
     "ClusterTimeline",
     "OrderReplay",
+    "RECONFIG_JOB",
     "ResidualView",
     "channel_delay_attribution",
     "job_holds",
@@ -104,6 +121,11 @@ _EPS = 1e-9
 # resource are disjoint (the feasibility invariant), so the start-sorted
 # index has sorted ends too and both columns bisect.
 _END = operator.itemgetter(1)
+
+# Owner id of δ reconfiguration intervals on wireless subchannels (no real
+# job ever commits with this id; the service reserves -1 for anonymous
+# commits, so reconfigurations get their own marker).
+RECONFIG_JOB = -2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -132,11 +154,25 @@ class ClusterTimeline:
     Args:
       n_racks: M physical racks.
       n_wireless: |K| physical wireless subchannels.
+      topology: optional cluster-level
+        :class:`~repro.core.instance.Topology` over
+        ``[n_racks, n_wireless]``. When given, residual views carry the
+        induced topology of the currently configured + up links, and
+        :meth:`reconfigure` / :meth:`set_link` manage the matching and
+        outage state. ``None`` (default) = the paper's model, bit-identical
+        to the pre-topology timeline.
       tracer: optional :class:`repro.obs.trace.Tracer` receiving
         compaction and audit-backlog events (``None`` = no tracing).
     """
 
-    def __init__(self, n_racks: int, n_wireless: int, *, tracer=None):
+    def __init__(
+        self,
+        n_racks: int,
+        n_wireless: int,
+        *,
+        topology: Topology | None = None,
+        tracer=None,
+    ):
         self.tracer = as_tracer(tracer)
         if n_racks < 1:
             raise ValueError("cluster needs at least one rack")
@@ -144,6 +180,25 @@ class ClusterTimeline:
             raise ValueError("n_wireless must be non-negative")
         self.n_racks = int(n_racks)
         self.n_wireless = int(n_wireless)
+        if topology is not None and topology.reach.shape != (
+            self.n_racks,
+            self.n_wireless,
+        ):
+            raise ValueError(
+                f"cluster topology shape {topology.reach.shape} != "
+                f"({self.n_racks}, {self.n_wireless})"
+            )
+        self.topology = topology
+        # Configured links (the current matching) and physical link health.
+        # Start fully configured: "static" serving never reconfigures and
+        # simply exposes reach & link_state.
+        self.matching = None if topology is None else topology.reach.copy()
+        self.link_state = (
+            None
+            if topology is None
+            else np.ones((self.n_racks, self.n_wireless), dtype=bool)
+        )
+        self.n_reconfigs = 0
         self.rack_hold = np.zeros(self.n_racks, dtype=np.float64)
         self.wireless_hold = np.zeros(self.n_wireless, dtype=np.float64)
         # Committed occupancy, (start, end, job_id) in absolute time. Each
@@ -171,6 +226,77 @@ class ClusterTimeline:
         self._audit_backlog: list[
             tuple[str, list[tuple[float, float, int]], tuple[float, float, int]]
         ] = []
+
+    # -- reconfigurable topology ---------------------------------------------
+
+    def active_reach(self) -> np.ndarray | None:
+        """bool[n_racks, n_wireless] of usable links — configured by the
+        current matching AND physically up — or ``None`` without a
+        cluster topology."""
+        if self.topology is None:
+            return None
+        return self.matching & self.link_state
+
+    def topology_signature(self):
+        """Hashable fingerprint of the active link set (``None`` without a
+        topology): folds into the service's availability signature so
+        matching / outage changes invalidate ``replan="changed"`` plans."""
+        if self.topology is None:
+            return None
+        return (self.matching & self.link_state).tobytes()
+
+    def set_link(self, rack: int, k: int, up: bool) -> bool:
+        """Flip one physical link's health (outage / repair); returns
+        whether the state changed. Links mid-transfer stay committed —
+        outages only gate *future* views and matchings."""
+        if self.topology is None:
+            raise RuntimeError("set_link needs a cluster topology")
+        up = bool(up)
+        if self.link_state[rack, k] == up:
+            return False
+        self.link_state[rack, k] = up
+        return True
+
+    def reconfigure(self, weight: np.ndarray, t: float) -> int:
+        """Re-match the wireless links to this epoch's demand at time ``t``.
+
+        Runs the topology's greedy weighted b-matching
+        (:meth:`~repro.core.instance.Topology.match`) over the links that
+        are physically up, with two timeline-imposed rules: subchannels
+        still busy at ``t`` (``wireless_hold > t``) keep their configured
+        links — those are pinned into the matching and count toward the
+        degree limits — and every *idle* subchannel whose link set changes
+        is charged the reconfiguration delay δ as a busy interval
+        ``[t, t + δ)`` owned by :data:`RECONFIG_JOB` (disjoint by
+        construction: an idle subchannel has no committed interval ending
+        after ``t``). Returns the number of subchannels reconfigured.
+        No-op (returns 0) without a cluster topology.
+        """
+        if self.topology is None:
+            return 0
+        idle = self.wireless_hold <= t
+        keep = self.matching.copy()
+        keep[:, idle] = False
+        feasible = self.link_state.copy()
+        feasible[:, ~idle] = False
+        new = self.topology.match(
+            np.asarray(weight, dtype=np.float64), feasible=feasible, keep=keep
+        )
+        changed = ((new != self.matching).any(axis=0)) & idle
+        n_changed = int(changed.sum())
+        delta = float(self.topology.delta)
+        if delta > 0.0 and n_changed:
+            for k in np.nonzero(changed)[0]:
+                self._insert(
+                    f"wireless subchannel {k}",
+                    self.wireless_intervals[int(k)],
+                    (t, t + delta, RECONFIG_JOB),
+                )
+                self.wireless_hold[k] = max(self.wireless_hold[k], t + delta)
+                self.wireless_busy_time += delta
+        self.matching = new
+        self.n_reconfigs += n_changed
+        return n_changed
 
     # -- residual capacity ---------------------------------------------------
 
@@ -206,6 +332,17 @@ class ClusterTimeline:
         free_w = (
             self.free_wireless(t) if wireless_pool is None else np.asarray(wireless_pool)
         )[: inst.n_wireless]
+        topo = None
+        if self.topology is not None:
+            # The induced topology of the currently usable links on the
+            # granted racks × subchannels; the solver stack (bounds,
+            # kernels, simulator) gates channel picks on it.
+            topo = dataclasses.replace(
+                self.topology,
+                reach=self.active_reach()[
+                    np.ix_(granted.astype(np.int64), free_w.astype(np.int64))
+                ],
+            )
         residual = ProblemInstance(
             job=inst.job,
             n_racks=int(granted.size),
@@ -213,6 +350,7 @@ class ClusterTimeline:
             wired_rate=inst.wired_rate,
             wireless_rate=inst.wireless_rate,
             local_delay=inst.local_delay,
+            topology=topo,
         )
         full = granted.size == inst.n_racks and free_w.size == inst.n_wireless
         return ResidualView(

@@ -364,6 +364,10 @@ class OnlineResult:
       max_overtakes_observed: largest per-job overtake count; when the
         service ran with a ``max_overtakes`` bound this is asserted
         ``<= max_overtakes`` before ``serve`` returns.
+      n_reconfigs: wireless subchannels reconfigured by the per-epoch
+        matching (0 unless the service ran with ``topology="matching"``).
+      n_link_events: link outage/repair events applied from the outage
+        trace (0 without one).
     """
 
     jobs: list[JobMetrics]
@@ -405,6 +409,8 @@ class OnlineResult:
         default_factory=dict
     )
     max_overtakes_observed: int = 0
+    n_reconfigs: int = 0
+    n_link_events: int = 0
 
     @property
     def slo_attainment(self) -> "dict[str, float]":

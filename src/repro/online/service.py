@@ -111,8 +111,9 @@ from repro.online.cluster import (
     replay_commit_order,
     reservation_backfill_safe,
 )
+from repro.core.instance import Topology
 from repro.online.metrics import JobMetrics, OnlineResult, StreamingSeries
-from repro.online.workload import ArrivalEvent
+from repro.online.workload import ArrivalEvent, LinkEvent
 from repro.obs.trace import as_tracer
 
 __all__ = ["OnlineScheduler", "DEFAULT_SOLVER_KWARGS"]
@@ -127,6 +128,24 @@ DEFAULT_SOLVER_KWARGS = dict(
     refine_rounds=2,
     refine_pool=256,
 )
+
+
+def _shape_key(inst) -> tuple:
+    """Resource-shape fingerprint an incumbent schedule is valid for.
+
+    A stored schedule replays only against a view with the same rack /
+    subchannel counts AND the same induced topology mask — under a
+    reconfigurable topology a channel pick that was feasible last epoch
+    may be unreachable now. An all-ones mask never restricts a pick, so
+    it fingerprints identically to ``topology=None``: queued planning
+    solves run on the topology-free full-demand instance, and their
+    incumbents must stay commit-eligible on an unrestricted view (this is
+    what keeps the static all-ones serve bit-identical to pre-topology).
+    """
+    key: tuple = (inst.n_racks, inst.n_wireless)
+    if inst.topology is not None and not inst.topology.is_all_ones:
+        key += (inst.topology.reach.tobytes(),)
+    return key
 
 
 @dataclasses.dataclass(eq=False)
@@ -153,7 +172,7 @@ class _PendingJob:
     # over re-optimizations.
     best_sched: Schedule | None = None
     best_makespan: float = np.inf
-    best_shape: tuple[int, int] | None = None
+    best_shape: tuple | None = None  # _shape_key of the producing solve
     # Simulator op tables for this job, built on first solve and reused
     # across every re-optimization epoch (tables depend only on the job's
     # DAG, so one build serves full-demand and residual shapes alike).
@@ -175,7 +194,7 @@ class _PendingJob:
             self.op_tables = build_op_tables(self.event.inst)
         return self.op_tables
 
-    def remember(self, res, shape: tuple[int, int], cap: int) -> None:
+    def remember(self, res, shape: tuple, cap: int) -> None:
         assignment = np.asarray(res.best_assignment, dtype=np.int64)
         key = assignment.tobytes()
         self.incumbents = [a for a in self.incumbents if a.tobytes() != key]
@@ -318,6 +337,7 @@ class _ServeState:
             "deadline_jobs": 0, "deadline_missed": 0,
             "deadline_deferrals": 0, "deadline_rejected": 0,
             "max_overtaken": 0,
+            "reconfigs": 0, "link_events": 0,
         }
     )
     peak_active: int = 0
@@ -326,6 +346,8 @@ class _ServeState:
     epoch_latency: list[float] | None = None
     avail_sig: tuple | None = None
     stream_exhausted: bool = False
+    # Cursor into the service's sorted outage trace (events applied once).
+    outage_pos: int = 0
     # Per-tier (met, total) SLO tallies, per-tenant queueing-delay
     # sketches and attained service (the wfair ordering key), and the
     # stream ids dropped by admission_control="reject".
@@ -481,6 +503,25 @@ class OnlineScheduler:
         job's *tier* tag, then 1.0) — a tenant with weight 2 is entitled
         to twice the attained service of a weight-1 tenant before
         ranking behind it. Unknown tags default to 1.0.
+      topology: wireless-link configuration policy under a
+        ``cluster_topology`` — ``"static"`` (default) exposes the
+        topology's reach mask as-is (minus outaged links), while
+        ``"matching"`` re-matches the links to the queue's wireless
+        demand every epoch (greedy weighted b-matching under the
+        topology's degree limits; reconfigured subchannels are charged
+        the topology's δ as busy time). Ignored without a
+        ``cluster_topology``; with an all-ones topology and no outages,
+        ``"static"`` serves bit-identically to no topology at all.
+      cluster_topology: optional cluster-level
+        :class:`~repro.core.instance.Topology` over
+        ``[n_racks, n_wireless]``. Residual views carry its induced mask,
+        so every solver stage co-optimizes placement, channel assignment
+        and the active matching. ``None`` (default) = the paper's model.
+      outages: optional seeded link outage trace
+        (:func:`repro.online.workload.link_outage_trace`): events with
+        ``time <= epoch`` flip the cluster's link state, and the active
+        link set folds into the ``replan="changed"`` fingerprint so
+        flaps re-solve exactly the invalidated plans.
       tracer: optional :class:`repro.obs.trace.Tracer`. When set, each
         epoch records nested wall-time spans (``epoch`` →
         ``collect_arrivals`` / ``plan_batch`` / ``arbitrate_and_commit``),
@@ -521,6 +562,9 @@ class OnlineScheduler:
         admission_control: str = "none",
         max_overtakes: int | None = None,
         tenant_weights: dict | None = None,
+        topology: str = "static",
+        cluster_topology: Topology | None = None,
+        outages: Sequence[LinkEvent] | None = None,
         tracer=None,
     ):
         if policy != "fleet" and policy not in ONLINE_BASELINES:
@@ -562,6 +606,12 @@ class OnlineScheduler:
             w <= 0 for w in tenant_weights.values()
         ):
             raise ValueError("tenant_weights must be positive")
+        if topology not in ("static", "matching"):
+            raise ValueError("topology must be 'static' or 'matching'")
+        if topology == "matching" and cluster_topology is None:
+            raise ValueError("topology='matching' needs a cluster_topology")
+        if outages and cluster_topology is None:
+            raise ValueError("an outage trace needs a cluster_topology")
         # The deadline-aware solo baseline is fifo_solo's placement under
         # EDF queue ordering; selecting it implies the ordering unless the
         # caller explicitly asked for another one.
@@ -593,6 +643,11 @@ class OnlineScheduler:
         self.admission_control = admission_control
         self.max_overtakes = None if max_overtakes is None else int(max_overtakes)
         self.tenant_weights = dict(tenant_weights) if tenant_weights else {}
+        self.topology = topology
+        self.cluster_topology = cluster_topology
+        self.outages = sorted(
+            outages or [], key=lambda e: (e.time, e.rack, e.subchannel)
+        )
         self.tracer = as_tracer(tracer)
         # Overtake bookkeeping runs only when overtakes are possible and
         # observable — the default FIFO/unbounded path skips it entirely.
@@ -618,6 +673,7 @@ class OnlineScheduler:
             cluster=ClusterTimeline(
                 self.n_racks,
                 self.n_wireless,
+                topology=self.cluster_topology,
                 tracer=tr if tr.enabled else None,
             ),
             free_r=_FreeSet(self.n_racks),
@@ -743,6 +799,8 @@ class OnlineScheduler:
             tier_slo=st.tier_slo,
             tenant_queue_stats=st.tenant_queue,
             max_overtakes_observed=st.counters["max_overtaken"],
+            n_reconfigs=st.counters["reconfigs"],
+            n_link_events=st.counters["link_events"],
         )
 
     # -- stage 1: collect ----------------------------------------------------
@@ -772,8 +830,72 @@ class OnlineScheduler:
         st.free_r.advance(t, st.cluster.rack_hold)
         st.free_w.advance(t, st.cluster.wireless_hold)
         st.stream_exhausted = stream.exhausted
+        if st.cluster.topology is not None:
+            self._epoch_topology(t, st)
         if self.replan == "changed":
-            st.avail_sig = (tuple(st.free_r.ids), tuple(st.free_w.ids))
+            sig = (tuple(st.free_r.ids), tuple(st.free_w.ids))
+            tsig = st.cluster.topology_signature()
+            if tsig is not None:
+                # Matching / outage changes invalidate cached plans: a
+                # schedule solved under the old link set may pick a now
+                # unreachable subchannel.
+                sig = sig + (tsig,)
+            st.avail_sig = sig
+
+    def _epoch_topology(self, t: float, st: _ServeState) -> None:
+        """Advance the reconfigurable-topology state to epoch ``t``: apply
+        due outage-trace events, then (under ``topology="matching"``)
+        re-match the wireless links to the queue's demand.
+
+        The matching weight is the queue's aggregate wireless transfer
+        volume placed on the racks currently free at ``t`` — pending jobs
+        are not placed yet, so per-rack demand is unknowable; weighting
+        the free racks steers links toward where the epoch's admissions
+        can actually land, and the greedy matcher's deterministic
+        tie-break does the rest. Subchannels mid-transfer keep their
+        links; every reconfigured idle subchannel is charged δ as a busy
+        interval by the timeline. Both steps are traced as decision
+        events (``link_outage`` / ``topology_matching``).
+        """
+        cluster = st.cluster
+        tr = self.tracer
+        flipped = 0
+        while st.outage_pos < len(self.outages):
+            ev = self.outages[st.outage_pos]
+            if ev.time > t:
+                break
+            flipped += cluster.set_link(ev.rack, ev.subchannel, ev.up)
+            st.outage_pos += 1
+        if flipped:
+            st.counters["link_events"] += flipped
+            if tr.enabled:
+                tr.event(
+                    "link_outage",
+                    t=float(t),
+                    n_links_changed=flipped,
+                    n_up=int(cluster.link_state.sum()),
+                )
+        if self.topology != "matching":
+            return
+        demand = np.zeros(self.n_racks, dtype=np.float64)
+        vol = 0.0
+        for p in st.pending:
+            inst = p.event.inst
+            if inst.n_wireless and inst.job.n_edges:
+                vol += float(np.sum(inst.q_wireless))
+        if vol > 0.0:
+            demand[st.free_r.as_array()] = vol
+        n_re = cluster.reconfigure(demand, t)
+        if n_re:
+            st.counters["reconfigs"] += n_re
+        if tr.enabled:
+            tr.event(
+                "topology_matching",
+                t=float(t),
+                n_reconfigured=n_re,
+                n_active=int(cluster.active_reach().sum()),
+                demand_volume=float(vol),
+            )
 
     def _deadline_control(self, t: float, st: _ServeState) -> None:
         """Resolve provably unmeetable deadlines at epoch ``t``.
@@ -1055,9 +1177,7 @@ class OnlineScheduler:
         st.counters["pruned"] += fleet.n_pruned
         for p, inst, res in zip(batch, instances, fleet.results):
             p.n_solves += 1
-            p.remember(
-                res, (inst.n_racks, inst.n_wireless), self.seed_pool_size
-            )
+            p.remember(res, _shape_key(inst), self.seed_pool_size)
         plan.results = fleet.results[: len(plan.admit)]
         return plan
 
@@ -1261,8 +1381,7 @@ class OnlineScheduler:
                 if (
                     self.warm_start
                     and p.best_makespan < mk
-                    and p.best_shape
-                    == (view.inst.n_racks, view.inst.n_wireless)
+                    and p.best_shape == _shape_key(view.inst)
                 ):
                     # Keep-incumbent re-optimization: the fresh solve did
                     # not beat the chain's best simulated schedule for

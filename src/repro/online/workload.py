@@ -65,8 +65,10 @@ from repro.core.instance import ProblemInstance
 
 __all__ = [
     "ArrivalEvent",
+    "LinkEvent",
     "SloTier",
     "DEFAULT_SLO_TIERS",
+    "link_outage_trace",
     "poisson_arrivals",
     "production_arrivals",
     "stream_poisson_arrivals",
@@ -510,3 +512,73 @@ def trace_arrivals(
         for j, (t, job) in enumerate(zip(times, jobs))
     ]
     return _sorted_events(events)
+
+
+# -- seeded link outage traces -------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkEvent:
+    """One wireless-link state flip in an outage trace.
+
+    Attributes:
+      time: absolute event time (traces are sorted by time).
+      rack: physical rack id of the flapping link.
+      subchannel: physical wireless subchannel index (0-based).
+      up: new link state — ``False`` = outage, ``True`` = repair.
+    """
+
+    time: float
+    rack: int
+    subchannel: int
+    up: bool
+
+
+def link_outage_trace(
+    seed: int,
+    n_racks: int,
+    n_wireless: int,
+    horizon: float,
+    *,
+    outage_rate: float = 0.02,
+    mean_downtime: float = 10.0,
+) -> list[LinkEvent]:
+    """Seeded two-state link flap trace for a reconfigurable topology.
+
+    Every (rack, subchannel) link alternates between up and down phases:
+    up phases last ``Exp(1 / outage_rate)`` (so ``outage_rate`` is the
+    per-link failure rate per time unit) and down phases
+    ``Exp(mean_downtime)``. Events past ``horizon`` are dropped; a link
+    down at the horizon simply stays down. Uses its own derived RNG
+    (``(seed, "flap")``), so composing a trace with any arrival stream
+    of the same seed leaves the arrivals bit-identical.
+
+    The online service applies events with ``time <= epoch`` to the
+    cluster's link state and folds the active-link fingerprint into the
+    availability signature, so ``replan="changed"`` re-solves exactly the
+    jobs whose plans a flap invalidates.
+
+    Returns the events sorted by ``(time, rack, subchannel)``.
+    """
+    if n_racks < 1 or n_wireless < 0:
+        raise ValueError("need n_racks >= 1 and n_wireless >= 0")
+    if outage_rate < 0 or mean_downtime < 0:
+        raise ValueError("outage_rate and mean_downtime must be >= 0")
+    events: list[LinkEvent] = []
+    if outage_rate == 0.0 or horizon <= 0.0:
+        return events
+    rng = np.random.default_rng([seed, int.from_bytes(b"flap", "big")])
+    for i in range(n_racks):
+        for k in range(n_wireless):
+            t = 0.0
+            while True:
+                t += float(rng.exponential(1.0 / outage_rate))
+                if t >= horizon:
+                    break
+                events.append(LinkEvent(t, i, k, False))
+                t += float(rng.exponential(mean_downtime))
+                if t >= horizon:
+                    break
+                events.append(LinkEvent(t, i, k, True))
+    events.sort(key=lambda e: (e.time, e.rack, e.subchannel))
+    return events

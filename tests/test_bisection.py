@@ -1,0 +1,178 @@
+"""Unit + property layer for the §IV-D bisection decomposition.
+
+Three families of checks on :func:`repro.core.solve_bisection`:
+
+  1. Bracket invariant: the recorded ``history`` is a valid bisection
+     trajectory — the interval only ever shrinks, an infeasible midpoint
+     raises ``lo`` to the midpoint, a feasible one drops ``hi`` to the
+     achieved makespan (at or below the midpoint, modulo the FP solver's
+     numeric slack), and the returned makespan is never below the final
+     lower bracket.
+  2. Convergence tolerance: the loop exits only once the gap clears
+     ``max(abs_tol, rel_tol * max(1, hi))`` (or ``max_iters`` runs out),
+     tightening ``rel_tol`` never loosens the final gap, and
+     ``max_iters=0`` degenerates to the always-feasible single-rack
+     fallback with an honest ``iterations == 0``.
+  3. Agreement property: on random small instances the bisection optimum
+     matches the combinatorial B&B optimum to within the requested
+     tolerance, and the returned schedule passes OP feasibility. Runs
+     under Hypothesis when installed, else a fixed seeded sweep of the
+     same check (this container ships without hypothesis by design).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ProblemInstance,
+    check_feasible,
+    lower_bound,
+    random_job,
+    solve_bisection,
+    solve_bnb,
+    upper_bound,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+# FP feasibility is certified by solve_rp at a small numeric tolerance, so
+# an "achieved" makespan may sit a hair above the probed midpoint.
+FP_SLACK = 1e-3
+
+
+def make_instance(seed, n_tasks=5, n_racks=3, n_wireless=None, rho=None):
+    rng = np.random.default_rng(seed)
+    if n_wireless is None:
+        n_wireless = int(rng.integers(0, 3))
+    if rho is None:
+        rho = float(rng.uniform(0.2, 2.0))
+    job = random_job(rng, None, n_tasks=n_tasks, rho=rho)
+    return ProblemInstance(job=job, n_racks=n_racks, n_wireless=n_wireless)
+
+
+def _assert_valid_trajectory(inst, res):
+    """The bracket-update invariants, replayed from ``history``."""
+    lo0, hi0 = lower_bound(inst), upper_bound(inst)
+    if res.history:
+        assert res.history[0][0] == pytest.approx(lo0)
+        assert res.history[0][1] == pytest.approx(hi0)
+    for i, (lo, hi, feasible) in enumerate(res.history):
+        assert lo < hi
+        mid = 0.5 * (lo + hi)
+        if i + 1 < len(res.history):
+            nlo, nhi, _ = res.history[i + 1]
+            if feasible:
+                # hi jumps to the achieved makespan, at or below mid.
+                assert nlo == pytest.approx(lo)
+                assert nhi <= mid + FP_SLACK
+            else:
+                assert nlo == pytest.approx(mid)
+                assert nhi == pytest.approx(hi)
+            # The interval never grows.
+            assert nlo >= lo - 1e-12 and nhi <= hi + 1e-12
+    assert res.iterations == len(res.history)
+    # The optimum can't be below the proven lower bracket.
+    final_lo = lo0
+    for lo, hi, feasible in res.history:
+        if not feasible:
+            final_lo = 0.5 * (lo + hi)
+    assert res.makespan >= final_lo - FP_SLACK
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_bracket_invariant(seed):
+    inst = make_instance(seed)
+    res = solve_bisection(inst, rel_tol=1e-3, time_limit_per_fp=60)
+    assert res.schedule is not None
+    check_feasible(inst, res.schedule, tol=1e-4)
+    assert res.makespan == pytest.approx(res.schedule.makespan)
+    _assert_valid_trajectory(inst, res)
+
+
+def test_convergence_tolerance_respected():
+    inst = make_instance(11)
+    rel_tol = 1e-2
+    res = solve_bisection(inst, rel_tol=rel_tol, max_iters=64,
+                          time_limit_per_fp=60)
+    # The loop only exits once the bracket clears the tolerance (max_iters
+    # is generous enough to never bind here: each iteration at least
+    # halves the gap).
+    hi = res.makespan  # final hi tracks the incumbent's makespan
+    assert res.final_gap <= max(1e-6, rel_tol * max(1.0, hi)) + 1e-12
+    assert res.iterations < 64
+    assert res.wall_s >= 0.0
+
+
+def test_tighter_tolerance_never_loosens_gap():
+    inst = make_instance(12)
+    loose = solve_bisection(inst, rel_tol=3e-2, time_limit_per_fp=60)
+    tight = solve_bisection(inst, rel_tol=1e-3, time_limit_per_fp=60)
+    assert tight.final_gap <= loose.final_gap + 1e-12
+    assert tight.iterations >= loose.iterations
+    # Both brackets contain the same optimum: tightening can only improve
+    # (lower) the certified makespan.
+    assert tight.makespan <= loose.makespan + FP_SLACK
+
+
+def test_max_iters_zero_falls_back_to_single_rack():
+    inst = make_instance(13)
+    res = solve_bisection(inst, max_iters=0)
+    assert res.iterations == 0
+    assert res.history == []
+    assert res.schedule is not None
+    check_feasible(inst, res.schedule)
+    # The fallback is the always-feasible T_max witness.
+    assert res.makespan <= upper_bound(inst) + FP_SLACK
+
+
+def _check_agreement(seed, n_tasks, n_racks, n_wireless, rho):
+    inst = make_instance(
+        seed, n_tasks=n_tasks, n_racks=n_racks, n_wireless=n_wireless, rho=rho
+    )
+    res = solve_bisection(inst, rel_tol=1e-3, time_limit_per_fp=60)
+    assert res.schedule is not None
+    check_feasible(inst, res.schedule, tol=1e-4)
+    _assert_valid_trajectory(inst, res)
+    opt = solve_bnb(inst, time_limit=60)
+    assert opt.proved_optimal
+    tol = max(1e-3 * max(1.0, opt.makespan) + FP_SLACK, res.final_gap + FP_SLACK)
+    assert res.makespan == pytest.approx(opt.makespan, abs=tol)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(
+        max_examples=6,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        seed=st.integers(0, 10**6),
+        n_tasks=st.integers(3, 5),
+        n_racks=st.integers(2, 3),
+        n_wireless=st.integers(0, 2),
+        rho=st.floats(0.25, 2.0, allow_nan=False),
+    )
+    def test_bisection_matches_bnb_property(
+        seed, n_tasks, n_racks, n_wireless, rho
+    ):
+        _check_agreement(seed, n_tasks, n_racks, n_wireless, rho)
+
+else:  # fixed seeded sweep of the same property
+
+    @pytest.mark.parametrize("case", range(6))
+    def test_bisection_matches_bnb_property(case):
+        rng = np.random.default_rng(4200 + case)
+        _check_agreement(
+            seed=int(rng.integers(10**6)),
+            n_tasks=int(rng.integers(3, 6)),
+            n_racks=int(rng.integers(2, 4)),
+            n_wireless=int(rng.integers(0, 3)),
+            rho=float(rng.uniform(0.25, 2.0)),
+        )

@@ -157,6 +157,57 @@ def test_combined_lb_kernel_extra_term_dominates():
     np.testing.assert_allclose(got_lo, cpm_only, atol=1e-4, rtol=1e-5)
 
 
+@pytest.mark.parametrize("B,n,block_b", [(13, 8, 8), (32, 12, 8), (257, 16, 64)])
+def test_combined_lb_kernel_mask_matches_oracle_ragged(B, n, block_b):
+    """Matching-feasibility mask path vs the NumPy reference on ragged
+    mega-batches: per-edge wired uplifts on a random subset of edges,
+    including all-padding rows."""
+    rng = np.random.default_rng(B * n + 1)
+    w, p, extra = _ragged_lb_megabatch(rng, B, n)
+    mask = np.zeros((B, n, n), np.float32)
+    sel = np.isfinite(w) & (rng.uniform(size=w.shape) < 0.5)
+    mask[sel] = rng.uniform(0, 20, size=int(sel.sum()))
+    got = np.asarray(
+        ops.batched_combined_lb(
+            jnp.asarray(w, jnp.float32), jnp.asarray(p), jnp.asarray(extra),
+            mask=jnp.asarray(mask), block_b=block_b,
+        )
+    )
+    want = ref_combined_lb(w, p, extra, mask=mask)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-5)
+    # all-padding rows still come out exactly 0 under a mask
+    empty = (p.sum(axis=1) == 0) & ~np.isfinite(extra)
+    assert (got[empty] == 0.0).all()
+    # the masked bound is never below the unmasked bound (uplift >= 0)
+    base = np.asarray(
+        ops.batched_combined_lb(
+            jnp.asarray(w, jnp.float32), jnp.asarray(p), jnp.asarray(extra),
+            block_b=block_b,
+        )
+    )
+    assert (got >= base - 1e-4).all()
+
+
+def test_combined_lb_kernel_zero_mask_is_identity():
+    """An all-zeros mask (all-ones topology) returns exactly the unmasked
+    kernel's values."""
+    rng = np.random.default_rng(11)
+    B, n = 24, 10
+    w, p, extra = _ragged_lb_megabatch(rng, B, n)
+    base = np.asarray(
+        ops.batched_combined_lb(
+            jnp.asarray(w, jnp.float32), jnp.asarray(p), jnp.asarray(extra)
+        )
+    )
+    zero = np.asarray(
+        ops.batched_combined_lb(
+            jnp.asarray(w, jnp.float32), jnp.asarray(p), jnp.asarray(extra),
+            mask=jnp.zeros((B, n, n), jnp.float32),
+        )
+    )
+    np.testing.assert_array_equal(base, zero)
+
+
 def test_jnp_flash_gradients_match_naive():
     import jax
 

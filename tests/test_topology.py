@@ -1,0 +1,459 @@
+"""Reconfigurable-topology contracts.
+
+Four families:
+
+1. ``Topology`` model unit tests — mask algebra (``pair_reach`` /
+   ``pair_connected`` / ``edge_channels`` / ``restrict``), the greedy
+   weighted b-matching (degree limits, pinning, determinism), and every
+   validation raise.
+2. Golden bit-identity — the default all-ones ``Topology`` is
+   value-identical to ``topology=None`` on solo, fleet, and online
+   serves, while a restricted mask provably changes the optimal
+   placement (a hand-built instance whose free optimum splits racks over
+   wireless and whose masked optimum must co-locate).
+3. Exhaustive small-instance oracle — on fleet batches of <= 3 jobs the
+   co-optimized solve (full reach) is never worse than the brute-force
+   optimum under ANY fixed feasible matching, and masked fleet solves
+   equal their brute-force oracles exactly.
+4. Online layer — ``ClusterTimeline`` matching state (idle-only
+   reconfiguration, delta charged as an audited busy interval, outage
+   gating of residual views) and the seeded ``link_outage_trace``.
+
+Plus the ``durations_matrix`` vectorization regression riding along.
+"""
+
+import dataclasses
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CH_LOCAL,
+    CH_WIRED,
+    DagJob,
+    ProblemInstance,
+    contention_lower_bounds,
+    random_job,
+    schedule_fleet,
+    simulate,
+    vectorized_search,
+)
+from repro.core.baselines import g_list_schedule
+from repro.core.instance import Topology
+from repro.online import OnlineScheduler, poisson_arrivals
+from repro.online.cluster import RECONFIG_JOB, ClusterTimeline
+from repro.online.workload import link_outage_trace
+
+SOLVER_KW = dict(max_enumerate=64, n_samples=32, batch_size=64)
+
+
+def make_instance(seed, n_tasks=5, n_racks=3, n_wireless=2, topology=None):
+    rng = np.random.default_rng(seed)
+    return ProblemInstance(
+        job=random_job(rng, None, n_tasks=n_tasks, rho=2.0),
+        n_racks=n_racks,
+        n_wireless=n_wireless,
+        topology=topology,
+    )
+
+
+def fork_instance(**kwargs):
+    """One source task feeding two heavy children: the free optimum splits
+    the children across racks (parallel compute, cheap wireless transfer);
+    with wireless unreachable the cross transfer costs q_wired = 50 and the
+    optimum must co-locate everything."""
+    job = DagJob(
+        p=np.array([1.0, 10.0, 10.0]),
+        edges=np.array([[0, 1], [0, 2]]),
+        d=np.array([1.0, 1.0]),
+    )
+    return ProblemInstance(
+        job=job,
+        n_racks=2,
+        n_wireless=1,
+        wired_rate=1.0 / 50.0,
+        wireless_rate=1.0,
+        **kwargs,
+    )
+
+
+# -- 1. Topology model --------------------------------------------------------
+
+
+def test_validation_errors():
+    ones = np.ones((2, 2), dtype=bool)
+    with pytest.raises(ValueError, match="n_racks, n_wireless"):
+        Topology(reach=np.ones(4, dtype=bool))
+    with pytest.raises(ValueError, match="degree"):
+        Topology(reach=ones, degree=-1)
+    with pytest.raises(ValueError, match="channel_degree"):
+        Topology(reach=ones, channel_degree=-2)
+    with pytest.raises(ValueError, match="delta"):
+        Topology(reach=ones, delta=-0.5)
+    with pytest.raises(ValueError, match="weight"):
+        Topology(reach=ones).match(np.ones(3))
+    with pytest.raises(ValueError, match="shape"):
+        make_instance(0, n_racks=3, n_wireless=2, topology=Topology(reach=ones))
+    with pytest.raises(ValueError, match="shape"):
+        ClusterTimeline(3, 2, topology=Topology(reach=ones))
+
+
+def test_all_ones_and_reach_mask():
+    t = Topology.all_ones(3, 2, delta=1.5)
+    assert t.n_racks == 3 and t.n_wireless == 2 and t.delta == 1.5
+    assert t.is_all_ones
+    assert not Topology(reach=np.array([[1, 0], [1, 1]], bool)).is_all_ones
+    inst = make_instance(0)
+    np.testing.assert_array_equal(
+        inst.reach_mask, np.ones((3, 2), dtype=bool)
+    )
+    masked = dataclasses.replace(inst, topology=Topology.all_ones(3, 2))
+    np.testing.assert_array_equal(masked.reach_mask, inst.reach_mask)
+
+
+def test_pair_algebra_and_restrict():
+    # rack 0 -> {k0}, rack 1 -> {k0, k1}, rack 2 -> {k1}
+    t = Topology(reach=np.array([[1, 0], [1, 1], [0, 1]], bool))
+    pr = t.pair_reach()
+    assert pr.shape == (3, 3, 2)
+    assert pr[0, 1, 0] and not pr[0, 1, 1]
+    conn = t.pair_connected()
+    assert conn[0, 1] and conn[1, 2] and not conn[0, 2]
+    np.testing.assert_array_equal(conn, conn.T)
+    np.testing.assert_array_equal(t.edge_channels(0, 1), [0])
+    np.testing.assert_array_equal(t.edge_channels(1, 1), [0, 1])
+    assert t.edge_channels(0, 2).size == 0
+    sub = t.restrict(np.array([1, 2]), np.array([1]))
+    np.testing.assert_array_equal(sub.reach, [[True], [True]])
+    assert sub.degree == t.degree and sub.delta == t.delta
+
+
+def test_match_degree_limits_and_determinism():
+    t = Topology(reach=np.ones((3, 2), bool), degree=1, channel_degree=2)
+    m = t.match(np.array([3.0, 2.0, 1.0]))
+    assert (m.sum(axis=1) <= 1).all()
+    assert (m.sum(axis=0) <= 2).all()
+    # Heaviest racks claim k0 first (ties break on index), rack 2 spills
+    # onto k1 once k0 is at channel_degree.
+    np.testing.assert_array_equal(m, [[1, 0], [1, 0], [0, 1]])
+    np.testing.assert_array_equal(m, t.match(np.array([3.0, 2.0, 1.0])))
+    # Zero-weight racks get no links at all.
+    np.testing.assert_array_equal(
+        t.match(np.array([0.0, 0.0, 5.0])).sum(axis=1), [0, 0, 1]
+    )
+    # Unbounded degrees: every positive-weight candidate link configures.
+    assert Topology(reach=np.ones((3, 2), bool)).match(np.ones(3)).all()
+
+
+def test_match_feasible_and_keep():
+    t = Topology(reach=np.ones((2, 2), bool), degree=1)
+    feas = np.array([[0, 1], [1, 1]], bool)
+    m = t.match(np.array([2.0, 1.0]), feasible=feas)
+    assert not m[0, 0]  # masked-out link never configured
+    assert (m <= feas).all()
+    # A pinned link survives even at zero weight and eats the degree
+    # budget, so rack 0 gets nothing else under degree=1.
+    keep = np.array([[1, 0], [0, 0]], bool)
+    m = t.match(np.array([0.0, 5.0]), keep=keep)
+    assert m[0, 0] and m[0].sum() == 1
+    assert m[1].sum() == 1
+
+
+# -- durations_matrix regression ---------------------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_durations_matrix_matches_per_channel_loop(seed):
+    inst = make_instance(seed, n_tasks=6, n_wireless=3)
+    m = inst.durations_matrix()
+    assert m.shape == (inst.job.n_edges, inst.n_channels)
+    for c in range(inst.n_channels):
+        chan = np.full(inst.job.n_edges, c)
+        np.testing.assert_array_equal(m[:, c], inst.duration_on(chan))
+
+
+# -- 2. Golden bit-identity + restricted mask ---------------------------------
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_all_ones_bit_identical_solo(seed):
+    inst = make_instance(seed)
+    masked = dataclasses.replace(
+        inst, topology=Topology.all_ones(inst.n_racks, inst.n_wireless)
+    )
+    a = vectorized_search(inst, seed=seed, **SOLVER_KW)
+    b = vectorized_search(masked, seed=seed, **SOLVER_KW)
+    assert a.makespan == b.makespan
+    np.testing.assert_array_equal(a.best_assignment, b.best_assignment)
+    np.testing.assert_array_equal(a.schedule.chan, b.schedule.chan)
+    np.testing.assert_array_equal(a.schedule.start, b.schedule.start)
+    assert a.n_candidates == b.n_candidates
+    assert a.n_pruned == b.n_pruned
+
+
+def test_all_ones_bit_identical_fleet():
+    insts = [make_instance(s, n_tasks=4 + s) for s in range(3)]
+    masked = [
+        dataclasses.replace(i, topology=Topology.all_ones(i.n_racks, i.n_wireless))
+        for i in insts
+    ]
+    a = schedule_fleet(insts, seed=7, **SOLVER_KW)
+    b = schedule_fleet(masked, seed=7, **SOLVER_KW)
+    np.testing.assert_array_equal(a.makespans, b.makespans)
+    for ra, rb in zip(a.results, b.results):
+        np.testing.assert_array_equal(ra.best_assignment, rb.best_assignment)
+        np.testing.assert_array_equal(ra.schedule.chan, rb.schedule.chan)
+
+
+def test_restricted_mask_changes_placement():
+    free = fork_instance()
+    blocked = fork_instance(topology=Topology(reach=np.zeros((2, 1), bool)))
+    # 8 assignments total: exhaustive, so both solves are exact optima.
+    a = vectorized_search(free, max_enumerate=8, n_samples=0)
+    b = vectorized_search(blocked, max_enumerate=8, n_samples=0)
+    # Free optimum splits the children (1 + 1 wireless transfer + 10);
+    # masked optimum co-locates (1 + 10 + 10 serialized on one rack).
+    assert a.makespan == pytest.approx(12.0)
+    assert b.makespan == pytest.approx(21.0)
+    assert len(np.unique(a.best_assignment)) == 2
+    assert len(np.unique(b.best_assignment)) == 1
+    assert (a.schedule.chan >= 2).any()
+    assert not (b.schedule.chan >= 2).any()
+
+
+def test_masked_schedule_respects_reach():
+    topo = Topology(reach=np.array([[1, 0], [1, 1], [0, 1]], bool))
+    for seed in range(3):
+        inst = make_instance(seed, n_tasks=6, topology=topo)
+        res = vectorized_search(inst, seed=seed, **SOLVER_KW)
+        rack, chan = res.schedule.rack, res.schedule.chan
+        for e, c in enumerate(chan):
+            if c >= 2:
+                u, v = inst.job.edges[e]
+                assert topo.reach[rack[u], c - 2]
+                assert topo.reach[rack[v], c - 2]
+
+
+def test_simulator_rejects_unreachable_fixed_pick():
+    inst = fork_instance(topology=Topology(reach=np.zeros((2, 1), bool)))
+    with pytest.raises(ValueError, match="unreachable"):
+        simulate(
+            inst, np.array([0, 1, 0]), chan=np.array([2, -1], dtype=np.int64)
+        )
+
+
+def test_greedy_baseline_respects_reach():
+    topo = Topology(reach=np.array([[1, 0], [1, 1], [0, 1]], bool))
+    for seed in range(4):
+        inst = make_instance(seed, n_tasks=7, topology=topo)
+        sched = g_list_schedule(inst)
+        for e, c in enumerate(sched.chan):
+            if c >= 2:
+                u, v = inst.job.edges[e]
+                assert topo.reach[sched.rack[u], c - 2]
+                assert topo.reach[sched.rack[v], c - 2]
+
+
+def test_masked_bounds_admissible():
+    """The sharpened masked §IV-A bound stays a true lower bound on the
+    masked simulate makespan, and never falls below the unmasked bound."""
+    topo = Topology(reach=np.array([[1, 0], [1, 1], [0, 1]], bool))
+    for seed in range(3):
+        inst = make_instance(seed, n_tasks=5)
+        masked = dataclasses.replace(inst, topology=topo)
+        racks = np.array(
+            list(itertools.product(range(3), repeat=5)), dtype=np.int64
+        )
+        lb_free = contention_lower_bounds(inst, racks)
+        lb_mask = contention_lower_bounds(masked, racks)
+        assert (lb_mask >= lb_free - 1e-12).all()
+        for a, lb in zip(racks, lb_mask):
+            assert simulate(masked, a).makespan >= lb - 1e-9
+
+
+# -- 3. Exhaustive matching oracle (batches <= 3) -----------------------------
+
+
+def brute_optimum(inst):
+    """Exact optimum by enumerating every rack assignment (AUTO channels)."""
+    best = np.inf
+    for a in itertools.product(range(inst.n_racks), repeat=inst.job.n_tasks):
+        best = min(best, simulate(inst, np.array(a)).makespan)
+    return best
+
+
+def feasible_matchings(n_racks, n_wireless, degree):
+    """Every reach mask obeying the per-rack degree limit."""
+    rows = [
+        r
+        for r in itertools.product([False, True], repeat=n_wireless)
+        if sum(r) <= degree
+    ]
+    for combo in itertools.product(rows, repeat=n_racks):
+        yield np.array(combo, dtype=bool)
+
+
+def test_cooptimized_matching_never_worse_exhaustive():
+    """Acceptance oracle: on batches of <= 3 small jobs, the co-optimized
+    solve over the full reach mask is never worse than the exact optimum
+    under ANY fixed feasible matching (degree 1), because every fixed
+    matching is a restriction of the full mask. Exhaustive enumeration on
+    both sides makes the comparison exact, and a mixed-mask fleet batch
+    must reproduce its per-instance brute-force oracles."""
+    insts = [
+        fork_instance(),
+        make_instance(1, n_tasks=3, n_racks=2, n_wireless=2),
+        make_instance(2, n_tasks=3, n_racks=2, n_wireless=2),
+    ]
+    # Align shapes: give the fork instance 2 subchannels too.
+    insts[0] = dataclasses.replace(insts[0], n_wireless=2)
+    full = schedule_fleet(insts, max_enumerate=16, n_samples=0)
+    for i, inst in enumerate(insts):
+        assert full.makespans[i] == pytest.approx(brute_optimum(inst))
+    picked = []
+    for mask in feasible_matchings(2, 2, degree=1):
+        masked = [
+            dataclasses.replace(i, topology=Topology(reach=mask))
+            for i in insts
+        ]
+        for i, m in enumerate(masked):
+            fixed_opt = brute_optimum(m)
+            assert full.makespans[i] <= fixed_opt + 1e-9
+        picked.append(masked[0])
+    # Mixed-topology fleet batch: exactness under each mask in one launch.
+    sample = picked[:3]
+    fleet = schedule_fleet(sample, max_enumerate=16, n_samples=0)
+    for i, m in enumerate(sample):
+        assert fleet.makespans[i] == pytest.approx(brute_optimum(m))
+
+
+# -- 4. Online layer: timeline matching state + outage traces -----------------
+
+
+def test_cluster_topology_inert_without_topology():
+    cl = ClusterTimeline(3, 2)
+    assert cl.active_reach() is None
+    assert cl.topology_signature() is None
+    assert cl.reconfigure(np.ones(3), 0.0) == 0
+    with pytest.raises(RuntimeError, match="topology"):
+        cl.set_link(0, 0, False)
+    view = cl.residual_view(make_instance(0), 0.0)
+    assert view.inst.topology is None
+
+
+def test_reconfigure_idle_only_and_delta_charged():
+    topo = Topology(reach=np.ones((3, 2), bool), degree=1, delta=2.0)
+    cl = ClusterTimeline(3, 2, topology=topo)
+    # Initial matching is the full reach mask; pin subchannel 0 busy.
+    cl.wireless_hold[0] = 10.0
+    before = cl.matching.copy()
+    n = cl.reconfigure(np.array([3.0, 2.0, 1.0]), t=1.0)
+    # Busy subchannel 0 keeps its configured links verbatim.
+    np.testing.assert_array_equal(cl.matching[:, 0], before[:, 0])
+    assert n >= 1 and cl.n_reconfigs == n
+    # Reconfigured idle subchannel 1 carries the delta busy interval.
+    ivs = cl.wireless_intervals[1]
+    assert any(iv == (1.0, 3.0, RECONFIG_JOB) for iv in ivs)
+    assert cl.wireless_hold[1] == 3.0
+    cl.assert_feasible(full=True)
+    # Degree 1 now binds: racks hold at most one link across channels.
+    assert ((cl.matching.sum(axis=1)) <= 1 + before.sum(axis=1)).all()
+
+
+def test_reconfigure_same_matching_is_free():
+    topo = Topology(reach=np.ones((2, 1), bool), delta=5.0)
+    cl = ClusterTimeline(2, 1, topology=topo)
+    # Unbounded degrees: the match of any positive weight is all-ones,
+    # identical to the initial matching, so nothing reconfigures and no
+    # delta is charged.
+    assert cl.reconfigure(np.ones(2), t=0.0) == 0
+    assert cl.wireless_intervals[0] == []
+    assert cl.n_reconfigs == 0
+
+
+def test_set_link_outage_gates_views():
+    topo = Topology(reach=np.ones((2, 2), bool))
+    cl = ClusterTimeline(2, 2, topology=topo)
+    sig0 = cl.topology_signature()
+    assert cl.set_link(0, 1, False)
+    assert not cl.set_link(0, 1, False)  # no-op flip reports unchanged
+    assert not cl.active_reach()[0, 1]
+    assert cl.topology_signature() != sig0
+    view = cl.residual_view(make_instance(0, n_racks=2, n_wireless=2), 0.0)
+    assert view.inst.topology is not None
+    assert not view.inst.topology.reach[0, 1]
+    assert cl.set_link(0, 1, True)
+    assert cl.topology_signature() == sig0
+
+
+def test_link_outage_trace_deterministic_and_sorted():
+    kw = dict(n_racks=3, n_wireless=2, horizon=500.0, outage_rate=0.02)
+    a = link_outage_trace(0, **kw)
+    b = link_outage_trace(0, **kw)
+    assert a and a == b
+    assert a != link_outage_trace(1, **kw)
+    keys = [(e.time, e.rack, e.subchannel) for e in a]
+    assert keys == sorted(keys)
+    for rack in range(3):
+        for k in range(2):
+            flips = [e.up for e in a if (e.rack, e.subchannel) == (rack, k)]
+            # Per-link events alternate down/up starting with an outage.
+            assert flips == [i % 2 == 1 for i in range(len(flips))]
+    assert link_outage_trace(0, 2, 1, horizon=100.0, outage_rate=0.0) == []
+    with pytest.raises(ValueError):
+        link_outage_trace(0, 0, 1, horizon=10.0)
+    with pytest.raises(ValueError):
+        link_outage_trace(0, 2, 1, horizon=10.0, outage_rate=-1.0)
+
+
+def test_online_all_ones_static_bit_identical():
+    """The serving-loop golden: an all-ones static cluster topology serves
+    bit-identically to no topology at all — including through the
+    warm-start incumbent path, whose shape keys must treat an all-ones
+    induced mask and a topology-free planning instance as the same."""
+    arrivals = poisson_arrivals(seed=3, rate=1 / 15.0, n_jobs=6, n_racks=3)
+    kw = dict(window=4.0, solver_kwargs=SOLVER_KW, seed=3, warm_start=True)
+    plain = OnlineScheduler(3, 2, **kw).serve(arrivals)
+    topo = OnlineScheduler(
+        3, 2, cluster_topology=Topology.all_ones(3, 2), **kw
+    ).serve(arrivals)
+    assert plain.mean_jct == topo.mean_jct
+    assert plain.makespan == topo.makespan
+    assert topo.n_reconfigs == 0 and topo.n_link_events == 0
+    for a, b in zip(plain.jobs, topo.jobs):
+        assert (a.admitted, a.completion, a.solver_makespan) == (
+            b.admitted,
+            b.completion,
+            b.solver_makespan,
+        )
+
+
+def test_online_matching_mode_serves_with_outages():
+    topo = Topology(reach=np.ones((4, 2), bool), degree=1, delta=0.5)
+    outages = link_outage_trace(
+        5, 4, 2, horizon=400.0, outage_rate=0.01, mean_downtime=20.0
+    )
+    res = OnlineScheduler(
+        4,
+        2,
+        window=4.0,
+        policy="greedy_list",
+        topology="matching",
+        cluster_topology=topo,
+        outages=outages,
+        seed=5,
+    ).serve(poisson_arrivals(seed=5, rate=1 / 20.0, n_jobs=6, n_racks=4))
+    assert res.n_jobs == 6
+    assert res.n_link_events > 0
+    assert res.n_reconfigs >= 0
+    assert np.isfinite(res.mean_jct) and res.makespan > 0
+
+
+def test_online_topology_knob_validation():
+    with pytest.raises(ValueError, match="topology"):
+        OnlineScheduler(2, 1, topology="adaptive")
+    with pytest.raises(ValueError, match="cluster_topology"):
+        OnlineScheduler(2, 1, topology="matching")
+    with pytest.raises(ValueError, match="outage"):
+        OnlineScheduler(2, 1, outages=link_outage_trace(0, 2, 1, horizon=50.0))

@@ -12,20 +12,26 @@ Loads a Chrome/Perfetto trace written by
      (``--job N``): every admission reorder, rejection proof, backfill
      verdict, and arbitration order that touched it.
 
+``--json OUT.json`` additionally writes the same report (per-epoch
+breakdown, commit-latency total, top-k slow jobs, optional audit) as a
+machine-readable JSON document for dashboards and regression scripts.
+
 Usage (from the repo root):
 
-    PYTHONPATH=src python tools/trace_report.py out.json [--top 10] [--job 42]
+    PYTHONPATH=src python tools/trace_report.py out.json [--top 10] \
+        [--job 42] [--json report.json]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
-from repro.obs.report import load_trace, render_report  # noqa: E402
+from repro.obs.report import load_trace, render_report, report_dict  # noqa: E402
 
 
 def main(argv=None) -> int:
@@ -37,8 +43,20 @@ def main(argv=None) -> int:
     ap.add_argument(
         "--job", type=int, default=None, help="print the decision audit for this job id"
     )
+    ap.add_argument(
+        "--json",
+        default=None,
+        metavar="OUT.json",
+        help="also write the report as machine-readable JSON to this path",
+    )
     args = ap.parse_args(argv)
-    print(render_report(load_trace(args.trace), top=args.top, job=args.job))
+    trace = load_trace(args.trace)
+    print(render_report(trace, top=args.top, job=args.job))
+    if args.json:
+        doc = report_dict(trace, top=args.top, job=args.job)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
     return 0
 
 
